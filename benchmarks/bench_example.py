@@ -1,0 +1,30 @@
+"""Paper Figs. 1-2: the worked example of Section 3.1, reproduced by every
+algorithm applicable to it."""
+
+import time
+
+import numpy as np
+
+from repro.core import Problem, schedule, solve_schedule_dp, total_cost
+
+
+def paper_problem(T):
+    c1 = np.array([0.0, 2, 3.5, 5.5, 8, 10, 12])
+    c2 = np.array([0.0, 1.5, 2.5, 4, 7, 9, 11])
+    c3 = np.array([0.0, 3, 4, 5, 6, 7])
+    return Problem(T=T, lower=[1, 0, 0], upper=[6, 6, 5], cost_tables=(c1, c2, c3))
+
+
+def run():
+    rows = []
+    for T, want_x, want_c in ((5, [2, 3, 0], 7.5), (8, [1, 2, 5], 11.5)):
+        p = paper_problem(T)
+        t0 = time.perf_counter()
+        reps = 200
+        for _ in range(reps):
+            x = solve_schedule_dp(p)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        c = total_cost(p, x)
+        ok = list(x) == want_x and abs(c - want_c) < 1e-9
+        rows.append((f"fig{1 if T == 5 else 2}_T{T}_dp", us, f"SigmaC={c} X={list(x)} match={ok}"))
+    return rows

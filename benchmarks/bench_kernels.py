@@ -1,0 +1,30 @@
+"""Min-plus Pallas kernel: correctness vs the jnp oracle + host-side timing
+of the oracle path (interpret-mode kernel timing is not meaningful — the
+kernel targets TPU; this validates and times the production jnp fallback)."""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels import minplus_pallas, minplus_step_ref
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for Tp, W in ((1024, 256), (4096, 1024)):
+        kprev = rng.uniform(0, 100, Tp).astype(np.float32)
+        cost = rng.uniform(0, 10, W).astype(np.float32)
+        ref_v, _ = minplus_step_ref(kprev, cost)
+        pal_v, _ = minplus_pallas(kprev, cost, interpret=True)
+        err = float(np.max(np.abs(np.asarray(ref_v) - np.asarray(pal_v))))
+        f = jax.jit(minplus_step_ref)
+        f(kprev, cost)[0].block_until_ready()
+        t0 = time.perf_counter()
+        reps = 20
+        for _ in range(reps):
+            f(kprev, cost)[0].block_until_ready()
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append((f"minplus_T{Tp}_W{W}", us, f"pallas_vs_ref_maxerr={err:.1e}"))
+    return rows

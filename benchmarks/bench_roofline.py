@@ -1,0 +1,37 @@
+"""Roofline table reader: summarizes artifacts/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) into one row per (arch, shape, mesh)."""
+
+import glob
+import json
+import os
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob(os.path.join("artifacts", "dryrun", "*.json")))
+    if not files:
+        return [("roofline_no_artifacts", 0.0, "run scripts/run_dryruns.sh first")]
+    n_ok = n_skip = n_err = 0
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        key = f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}"
+        if d["status"] == "skipped":
+            n_skip += 1
+            rows.append((key, 0.0, f"skipped: {d['reason']}"))
+        elif d["status"] == "error":
+            n_err += 1
+            rows.append((key, 0.0, f"ERROR: {d.get('error', '?')[:80]}"))
+        else:
+            n_ok += 1
+            r = d["roofline"]
+            rows.append(
+                (
+                    key,
+                    d.get("compile_s", 0.0) * 1e6,
+                    "compute=%.3es memory=%.3es coll=%.3es dominant=%s"
+                    % (r["t_compute_s"], r["t_memory_s"], r["t_collective_s"], r["dominant"]),
+                )
+            )
+    rows.append(("roofline_summary", 0.0, f"ok={n_ok} skipped={n_skip} error={n_err}"))
+    return rows

@@ -1,0 +1,79 @@
+"""Paper Table 2 (complexity table): empirical runtime scaling in T and n for
+each algorithm; fits the scaling exponent in T to validate the stated
+complexities (DP ~ T^2, MarIn ~ T log n, MarCo/MarDecUn ~ const in T,
+MarDec ~ T)."""
+
+import time
+
+import numpy as np
+
+from repro.core import random_problem, schedule
+
+ALG_REGIME = {
+    "dp": "arbitrary",
+    "marin": "increasing",
+    "marco": "linear",
+    "mardecun": "decreasing",
+    "mardec": "decreasing",
+    "olar": "increasing",
+}
+
+T_GRID = (64, 128, 256, 512)
+EXPECT_T_EXP = {"dp": 2.0, "marin": 1.0, "marco": 0.0, "mardecun": 0.0, "mardec": 1.0, "olar": 1.0}
+
+
+def _time_alg(alg, p, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        schedule(p, alg, check=False)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    rng = np.random.default_rng(1)
+    rows = []
+    for alg, regime in ALG_REGIME.items():
+        times = []
+        for T in T_GRID:
+            if alg == "mardecun":
+                from repro.core.costs import sublinear_cost
+                from repro.core import Problem
+
+                n = 16
+                tables = tuple(
+                    sublinear_cost(T, float(rng.uniform(5, 40)), float(rng.uniform(2, 20)))
+                    for _ in range(n)
+                )
+                p = Problem(T=T, lower=np.zeros(n, int), upper=np.full(n, T), cost_tables=tables)
+            else:
+                p = random_problem(rng, n=16, T=T, regime=regime)
+            times.append(_time_alg(alg, p))
+        # fit exponent over the T grid
+        exp = float(np.polyfit(np.log(T_GRID), np.log(np.maximum(times, 1e-7)), 1)[0])
+        us = times[-1] * 1e6
+        rows.append(
+            (f"runtime_{alg}_T{T_GRID[-1]}", us, f"T_exponent={exp:.2f} expect<={EXPECT_T_EXP[alg] + 0.4}")
+        )
+    # scaling in n for MarCo/MarDecUn (Theta(n log n) / Theta(n))
+    for alg in ("marco", "mardecun", "marin"):
+        times = []
+        n_grid = (8, 32, 128)
+        for n in n_grid:
+            if alg == "mardecun":
+                from repro.core.costs import sublinear_cost
+                from repro.core import Problem
+
+                T = 128
+                tables = tuple(
+                    sublinear_cost(T, float(rng.uniform(5, 40)), float(rng.uniform(2, 20)))
+                    for _ in range(n)
+                )
+                p = Problem(T=T, lower=np.zeros(n, int), upper=np.full(n, T), cost_tables=tables)
+            else:
+                p = random_problem(rng, n=n, T=128, regime=ALG_REGIME[alg])
+            times.append(_time_alg(alg, p))
+        exp = float(np.polyfit(np.log(n_grid), np.log(np.maximum(times, 1e-7)), 1)[0])
+        rows.append((f"runtime_{alg}_n{n_grid[-1]}", times[-1] * 1e6, f"n_exponent={exp:.2f}"))
+    return rows

@@ -1,0 +1,57 @@
+"""Carbon-aware FL scheduling (paper §6: the algorithms minimize ANY cost —
+weight each device's energy by the carbon intensity of its grid region).
+
+Cost tables become gCO2e(j) = carbon_intensity[g/kWh] * E_i(j)[J] / 3.6e6.
+The same optimal algorithms then minimize emissions instead of Joules; the
+example shows the schedule shifting work toward low-carbon regions even when
+their devices are less energy-efficient.
+"""
+
+import numpy as np
+
+from repro.core import Problem, schedule, total_cost
+from repro.core.costs import linear_cost
+
+# (region, carbon g/kWh, device J/batch, max batches)
+FLEET = [
+    ("IS-hydro", 28, 3.0, 24),   # efficient grid, mediocre device
+    ("FR-nuclear", 79, 2.2, 24),
+    ("US-CA", 216, 1.8, 24),
+    ("DE", 381, 1.6, 24),        # efficient device, dirty-ish grid
+    ("PL-coal", 657, 1.5, 24),   # most efficient device, dirtiest grid
+]
+
+
+def main():
+    T = 60
+    n = len(FLEET)
+    energy_tables = tuple(linear_cost(u, jpb) for _, _, jpb, u in FLEET)
+    carbon_tables = tuple(
+        linear_cost(u, jpb) * (ci / 3.6e6) * 1000  # -> mgCO2e
+        for _, ci, jpb, u in FLEET
+    )
+    e_prob = Problem(T=T, lower=[0] * n, upper=[u for *_, u in FLEET], cost_tables=energy_tables)
+    c_prob = Problem(T=T, lower=[0] * n, upper=[u for *_, u in FLEET], cost_tables=carbon_tables)
+
+    x_energy = schedule(e_prob, "auto")
+    x_carbon = schedule(c_prob, "auto")
+
+    print(f"{'region':>12} | {'J/batch':>7} | {'g/kWh':>6} | {'x (min J)':>9} | {'x (min CO2)':>11}")
+    print("-" * 60)
+    for (region, ci, jpb, u), xe, xc in zip(FLEET, x_energy, x_carbon):
+        print(f"{region:>12} | {jpb:7.1f} | {ci:6d} | {int(xe):9d} | {int(xc):11d}")
+
+    print(
+        f"\nmin-energy schedule: {total_cost(e_prob, x_energy):.1f} J, "
+        f"{total_cost(c_prob, x_energy):.2f} mgCO2e"
+    )
+    print(
+        f"min-carbon schedule: {total_cost(e_prob, x_carbon):.1f} J, "
+        f"{total_cost(c_prob, x_carbon):.2f} mgCO2e"
+    )
+    drop = 100 * (1 - total_cost(c_prob, x_carbon) / total_cost(c_prob, x_energy))
+    print(f"emissions reduced {drop:.1f}% by optimizing the right objective")
+
+
+if __name__ == "__main__":
+    main()

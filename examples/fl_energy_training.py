@@ -1,0 +1,101 @@
+"""End-to-end driver: federated training of a transformer LM with
+energy-minimal workload scheduling, vs a uniform-split baseline.
+
+Runs a real FedAvg campaign (masked-scan clients, jitted rounds) on a
+synthetic non-IID corpus with a simulated heterogeneous fleet. Model size /
+rounds are CLI-scalable; defaults run on a laptop CPU in a few minutes.
+
+    PYTHONPATH=src python examples/fl_energy_training.py \
+        --rounds 40 --clients 8 --layers 2 --d-model 128
+
+Scaling up (e.g. --layers 8 --d-model 320 --vocab 8192 ~ 10M params,
+--rounds 300) reproduces the same curves at larger scale.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import client_corpora, make_lm_examples
+from repro.fl import EnergyEstimator, FederatedServer, make_fleet, run_campaign
+from repro.models import init_params, loss_fn, param_count
+from repro.optim import sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-batches", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--algorithm", default="auto", help="auto|dp|marin|olar|uniform|proportional")
+    ap.add_argument("--compare", action="store_true", help="also run the uniform baseline")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        arch="fl-lm", family="dense",
+        num_layers=args.layers, d_model=args.d_model,
+        num_heads=max(args.d_model // 64, 2), num_kv_heads=max(args.d_model // 64, 2),
+        d_ff=args.d_model * 4, vocab_size=args.vocab,
+    )
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size} "
+          f"-> {param_count(params0)/1e6:.2f}M params")
+
+    def lm_loss(params, batch):
+        return loss_fn(params, cfg, {"tokens": batch})
+
+    def campaign(algorithm, seed=0):
+        rng = np.random.default_rng(seed)
+        fleet = make_fleet(rng, args.clients, max_batches=args.max_batches)
+        est = EnergyEstimator(fleet)
+        est.calibrate(rng)
+        corpora = client_corpora(rng, args.clients, args.seq * 200, args.vocab)
+        examples = [make_lm_examples(c, args.seq) for c in corpora]
+        server = FederatedServer(
+            loss_fn=lm_loss,
+            init_params=init_params(cfg, jax.random.PRNGKey(seed)),
+            client_optimizer=sgd(args.lr),
+            estimator=est,
+            algorithm=algorithm,
+        )
+        T = sum(d.max_batches for d in fleet) // 2
+        t0 = time.time()
+
+        def on_round(r):
+            if r.round_index % max(args.rounds // 10, 1) == 0:
+                print(
+                    f"  [{algorithm}] round {r.round_index:3d} loss {r.mean_loss:.4f} "
+                    f"energy {r.energy_joules:8.1f} J  x={list(r.assignments)}"
+                )
+
+        hist = run_campaign(
+            server, examples, args.rounds, round_T=T, batch_size=args.batch,
+            rng=rng, on_round=on_round,
+        )
+        print(f"  [{algorithm}] wall {time.time() - t0:.1f}s  {hist.summary()}")
+        return hist
+
+    print(f"\n=== campaign: {args.algorithm} scheduler ===")
+    h_opt = campaign(args.algorithm)
+    if args.compare:
+        print("\n=== campaign: uniform baseline ===")
+        h_uni = campaign("uniform")
+        save = 100 * (1 - h_opt.total_energy / h_uni.total_energy)
+        print(
+            f"\nenergy: {h_opt.total_energy:.0f} J vs uniform {h_uni.total_energy:.0f} J "
+            f"({save:.1f}% saved); final loss {h_opt.rounds[-1].mean_loss:.4f} "
+            f"vs {h_uni.rounds[-1].mean_loss:.4f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

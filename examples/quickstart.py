@@ -1,0 +1,53 @@
+"""Quickstart: schedule one FL round's workload for minimal energy.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    DEVICE_CLASSES,
+    device_fleet_problem,
+    schedule,
+    select_algorithm,
+    total_cost,
+)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # A heterogeneous fleet: 2 low-end phones, a tablet, a laptop, two edge
+    # accelerators. Each gets an energy cost table C_i(j) (Joules for j
+    # mini-batches) from its device class.
+    classes = ["phone_lo", "phone_lo", "tablet", "laptop", "edge_tpu", "jetson"]
+    T = 48  # mini-batches to distribute this round
+    problem = device_fleet_problem(
+        T=T,
+        classes=classes,
+        upper=[12, 12, 16, 24, 32, 32],
+        lower=[1, 1, 0, 0, 0, 0],  # keep both phones participating
+    )
+    problem.validate()
+
+    print(f"fleet: {classes}")
+    print(f"round workload T={T}, regime detected: {problem.regime()!r}")
+    print(f"auto-selected algorithm: {select_algorithm(problem)}\n")
+
+    print(f"{'algorithm':>16} | {'schedule x_i':>28} | energy (J)")
+    print("-" * 72)
+    for alg in ("auto", "dp", "marin", "olar", "uniform", "proportional"):
+        try:
+            x = schedule(problem, alg)
+        except Exception as e:
+            print(f"{alg:>16} | inapplicable: {e}")
+            continue
+        print(f"{alg:>16} | {str(list(x)):>28} | {total_cost(problem, x):8.1f}")
+
+    x_opt = schedule(problem, "auto")
+    x_uni = schedule(problem, "uniform")
+    save = 100 * (1 - total_cost(problem, x_opt) / total_cost(problem, x_uni))
+    print(f"\nenergy saved vs uniform split: {save:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

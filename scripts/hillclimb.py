@@ -1,0 +1,88 @@
+"""§Perf hillclimbing driver: lowers a (arch, shape) combo under a named
+sharding/config VARIANT and records the roofline terms.
+
+    python scripts/hillclimb.py --arch deepseek-7b --shape train_4k --variant fsdp_only
+
+Variants encode the hypothesis being tested (see EXPERIMENTS.md §Perf).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# variant -> (cfg_overrides, rules_overrides)
+VARIANTS = {
+    # paper-faithful baseline: uniform 2-D fsdp+tp sharding
+    "baseline": ({}, {}),
+    # pure FSDP over all 256 chips: batch & weight shards over ('data','model'),
+    # no tensor parallelism, no sequence-parallel gathers
+    "fsdp_only": (
+        {},
+        {"batch": ("data", "model"), "fsdp": ("data", "model"), "tensor": None, "act_seq": None},
+    ),
+    # keep TP but drop sequence-parallel residuals (trades memory for gathers)
+    "no_actseq": ({}, {"act_seq": None}),
+    # TP=4 hybrid: fsdp gets 4x more devices via a reshaped logical mapping is
+    # not expressible on the fixed mesh; approximate with fsdp over both axes
+    # but tensor kept for the FFN only via act_seq off
+    "fsdp_tp_noseq": ({}, {"batch": ("data",), "act_seq": None}),
+    # remat policy: save dots (more memory, less recompute)
+    "remat_dots": ({"remat": "dots"}, {}),
+    # bigger attention query blocks (fewer scan trips, bigger tiles)
+    "blockq_1024": ({"attn_block_q": 1024}, {}),
+    # MoE: einsum dispatch instead of a2a (hypothesis: a2a wins at train scale)
+    "moe_einsum": ({"moe_impl": "einsum"}, {}),
+    # MoE: lower capacity factor (less padding waste)
+    "cap_1_0": ({"capacity_factor": 1.0}, {}),
+    # expert-parallel over 'model' only (ds-v3: 16 experts/device instead of 1)
+    "ep_model": ({}, {"expert": ("model",)}),
+    # fsdp_only + tight MoE capacity (less dispatch-buffer padding traffic)
+    "fsdp_cap10": (
+        {"capacity_factor": 1.0},
+        {"batch": ("data", "model"), "fsdp": ("data", "model"), "tensor": None, "act_seq": None},
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    if args.save_hlo:
+        os.environ["DRYRUN_HLO_DIR"] = "artifacts/perf_hlo"
+
+    from repro.launch.dryrun import lower_one
+
+    cfg_o, rules_o = VARIANTS[args.variant]
+    result = lower_one(
+        args.arch, args.shape, args.mesh == "multipod",
+        cfg_overrides=cfg_o, rules_overrides=rules_o,
+    )
+    result["variant"] = args.variant
+    out = f"artifacts/perf/{args.arch}.{args.shape}.{args.variant}.json"
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1)
+    r = result.get("roofline", {})
+    print(
+        f"\n{args.arch} {args.shape} [{args.variant}]: "
+        f"compute={r.get('t_compute_s', 0):.3e} memory={r.get('t_memory_s', 0):.3e} "
+        f"collective={r.get('t_collective_s', 0):.3e} dominant={r.get('dominant')}"
+    )
+
+
+if __name__ == "__main__":
+    main()

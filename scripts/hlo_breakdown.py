@@ -1,0 +1,97 @@
+"""Per-computation cost breakdown of a dry-run combo: which while loops /
+computations dominate each roofline term (the §Perf profile on CPU — no
+wall-clock trace exists, so this IS the profiler)."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import hlo_analysis as H
+
+
+def breakdown(hlo_text, top=14):
+    comps, entry = H._parse_computations(hlo_text)
+    memo = {}
+    total = H._comp_cost(comps, entry, memo)
+    print(f"TOTAL flops={total.flops:.3e} mem={total.mem_bytes:.3e} coll={total.coll_total:.3e}")
+
+    # effective (trip-multiplied) contribution per while loop
+    rows = []
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind != "while":
+                continue
+            b = H._BODY_RE.search(op.rhs)
+            tm = H._TRIP_RE.search(op.rhs)
+            trips = int(tm.group(1)) if tm else 1
+            body = memo.get(b.group(1)) if b else None
+            if body:
+                rows.append(
+                    (trips * body.mem_bytes, trips * body.flops, trips * body.coll_total,
+                     trips, b.group(1)[:70], comp.name[:40])
+                )
+    rows.sort(reverse=True)
+    print(f"\n{'mem(bytes)':>12} {'flops':>12} {'coll':>12} {'trips':>6} body (in parent)")
+    for mem, fl, co, trips, body, parent in rows[:top]:
+        print(f"{mem:12.3e} {fl:12.3e} {co:12.3e} {trips:6d} {body}  <- {parent}")
+
+    # biggest single ops in entry by result bytes
+    ec = comps[entry]
+    big = sorted(ec.ops, key=lambda o: -o.result_bytes)[:8]
+    print("\nbiggest entry-level ops:")
+    for op in big:
+        print(f"  {op.result_bytes:12.3e}B {op.kind:>14} {op.name[:60]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    # reuse dryrun's lowering path, but keep the HLO
+    import repro.launch.dryrun as dr
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import INPUT_SHAPES
+    from repro.launch import sharding as shd
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (
+        abstract_opt_state, abstract_params, batch_pspecs, build_prefill_step,
+        build_serve_step, build_train_step, cache_pspecs, train_shardings,
+    )
+    from repro.models import init_cache
+    from repro.models.model import _batch_struct
+
+    shape = INPUT_SHAPES[args.shape]
+    cfg, rules = dr.configure(args.arch, shape)
+    mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+    shd.set_mesh(mesh, rules)
+    params_struct = abstract_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        step, opt = build_train_step(cfg)
+        opt_struct = abstract_opt_state(cfg, params_struct)
+        batch_struct = _batch_struct(cfg, B, S, "train")
+        ps, os_, bs = train_shardings(cfg, params_struct, opt_struct, batch_struct, B)
+        lowered = jax.jit(step, in_shardings=(ps, os_, bs), out_shardings=(ps, os_, None),
+                          donate_argnums=(0, 1)).lower(params_struct, opt_struct, batch_struct)
+    else:
+        raise SystemExit("breakdown currently supports train shapes")
+    hlo = lowered.compile().as_text()
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(hlo)
+    breakdown(hlo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Generates the §Dry-run and §Roofline markdown tables for EXPERIMENTS.md
+from artifacts/dryrun/*.json."""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARCH_ORDER = [
+    "xlstm-1.3b", "zamba2-2.7b", "granite-20b", "paligemma-3b", "olmoe-1b-7b",
+    "hubert-xlarge", "deepseek-v3-671b", "deepseek-7b", "gemma2-2b", "minitron-8b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+# analytic MODEL_FLOPS (6ND train / 2ND inference) per device — see
+# repro.models.model.model_flops_per_token
+from repro.configs import INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch.steps import abstract_params  # noqa: E402
+from repro.models.model import active_param_count, model_flops_per_token  # noqa: E402
+
+
+def gb(x):
+    return "-" if x is None else f"{x / 2**30:.2f}"
+
+
+def model_flops_per_device(arch, shape_name, n_chips):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    params = abstract_params(cfg)
+    per_tok = model_flops_per_token(params, cfg, shape.seq_len,
+                                    "train" if shape.mode == "train" else "inference")
+    if shape.mode == "decode":
+        tokens = shape.global_batch  # ONE new token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    return per_tok * tokens / n_chips
+
+
+def main():
+    arts = {}
+    for f in glob.glob("artifacts/dryrun/*.json"):
+        d = json.load(open(f))
+        arts[(d["arch"], d["shape"], d["mesh"])] = d
+
+    print("### §Dry-run — lower+compile status, memory analysis (per device)\n")
+    print("| arch | shape | mesh | status | compile_s | args GB | temp GB | aliased GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for mesh in ("16x16", "2x16x16"):
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                d = arts.get((arch, shape, mesh))
+                if d is None:
+                    print(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                if d["status"] != "ok":
+                    reason = d.get("reason", d.get("error", ""))[:60]
+                    print(f"| {arch} | {shape} | {mesh} | {d['status']}: {reason} | | | | |")
+                    continue
+                m = d["memory"]
+                alias = None
+                print(
+                    f"| {arch} | {shape} | {mesh} | ok | {d['compile_s']:.0f} "
+                    f"| {gb(m['argument_bytes'])} | {gb(m['temp_bytes'])} | "
+                    f"{gb(m.get('peak_bytes'))} |"
+                )
+
+    print("\n### §Roofline — per-device terms (16x16 pod mesh), loop-aware HLO analysis\n")
+    print("| arch | shape | t_compute s | t_memory s | t_coll s | dominant | MODEL_FLOPs/HLO_FLOPs | top collective |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = arts.get((arch, shape, "16x16"))
+            if d is None or d["status"] != "ok":
+                continue
+            r = d["roofline"]
+            mf = model_flops_per_device(arch, shape, d["n_chips"])
+            ratio = mf / max(r["hlo_flops_per_device"], 1.0)
+            by_type = r.get("collective_bytes_by_type", {})
+            top = max(by_type.items(), key=lambda kv: kv[1])[0] if any(by_type.values()) else "-"
+            print(
+                f"| {arch} | {shape} | {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+                f"| {r['t_collective_s']:.3e} | {r['dominant']} | {ratio:.2f} | {top} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

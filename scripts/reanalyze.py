@@ -1,0 +1,32 @@
+"""Re-runs the loop-aware HLO analysis over saved .hlo.zst artifacts and
+updates the matching dry-run JSONs in place (walker improvements without
+recompiles)."""
+
+import glob
+import json
+import os
+import sys
+
+import zstandard
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.roofline import roofline_terms_from_hlo  # noqa: E402
+
+
+def main():
+    for hf in sorted(glob.glob("artifacts/hlo/*.hlo.zst")):
+        base = os.path.basename(hf)[: -len(".hlo.zst")]
+        jf = os.path.join("artifacts", "dryrun", base + ".json")
+        if not os.path.exists(jf):
+            continue
+        hlo = zstandard.ZstdDecompressor().decompress(open(hf, "rb").read(), max_output_size=2**33).decode()
+        terms = roofline_terms_from_hlo(hlo)
+        d = json.load(open(jf))
+        d["roofline"] = terms
+        json.dump(d, open(jf, "w"), indent=1)
+        print(base, "->", terms["dominant"],
+              f"c={terms['t_compute_s']:.2e} m={terms['t_memory_s']:.2e} x={terms['t_collective_s']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Dependency-free pytree checkpointing: .npz arrays + .json tree manifest.
+
+Leaves are flattened with ``jax.tree_util.tree_flatten_with_path``; the path
+strings key the npz entries, so save/restore round-trips arbitrary nested
+dict/list/tuple/dataclass-free pytrees (the param trees in this codebase are
+nested dicts). Scalars/ints/floats round-trip as 0-d arrays.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:  # pragma: no cover
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, extra: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    for path, leaf in leaves_with_paths:
+        k = _path_str(path)
+        keys.append(k)
+        arrays[k] = np.asarray(jax.device_get(leaf))
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    np.savez(base + ".npz", **arrays)
+    manifest = {"step": step, "keys": keys, "extra": extra or {}}
+    with open(base + ".json", "w") as f:
+        json.dump(manifest, f)
+    return base
+
+
+def load_checkpoint(directory: str, step: int, like: Any):
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(base + ".npz")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_with_paths:
+        k = _path_str(path)
+        arr = data[k]
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype).reshape(np.asarray(leaf).shape))
+    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), new_leaves)
+    return tree, manifest
+
+
+def latest_checkpoint(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[len("ckpt_") : -len(".json")])
+        for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".json")
+    ]
+    return max(steps) if steps else None

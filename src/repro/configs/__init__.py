@@ -1,0 +1,28 @@
+"""Architecture registry. One module per assigned architecture; importing
+them registers (full, smoke) config pairs."""
+
+from .base import INPUT_SHAPES, InputShape, ModelConfig, get_config, list_archs, register
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (  # noqa: F401
+        deepseek_7b,
+        deepseek_v3_671b,
+        gemma2_2b,
+        granite_20b,
+        hubert_xlarge,
+        minitron_8b,
+        olmoe_1b_7b,
+        paligemma_3b,
+        xlstm_1_3b,
+        zamba2_2_7b,
+    )
+
+
+__all__ = ["ModelConfig", "InputShape", "INPUT_SHAPES", "get_config", "list_archs", "register"]

@@ -1,0 +1,134 @@
+"""Model/run configuration dataclasses + the architecture registry."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "register", "get_config", "list_archs", "InputShape", "INPUT_SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str  # dense | moe | ssm | hybrid | encoder | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+
+    # dense variants
+    mlp_kind: str = "gated_silu"  # gated_silu | gelu | squared_relu
+    attn_kind: str = "causal"  # causal | local_global (gemma2) | bidirectional
+    window: int = 4096  # sliding window for local layers
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+    rope_base: float = 10000.0
+    tie_embeddings: bool = False
+    scale_embedding: bool = False  # gemma family: h *= sqrt(d_model)
+    long_context: bool = False  # serving mode: global attn layers fall back to sliding window
+    attn_block_q: int = 0  # 0 = full attention matrix; >0 = query-blocked scan
+    attn_impl: str = "xla"  # xla | pallas (flash-attention kernel; TPU target)
+    moe_impl: str = "dense"  # dense | einsum | a2a (set by driver per shape)
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_every: int = 1  # every layer is MoE except the first `dense_prefix`
+    dense_prefix_layers: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # MLA (deepseek-v3)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 0
+    v_head_dim: int = 0
+    use_mtp: bool = False
+    mtp_weight: float = 0.3
+
+    # SSM / xLSTM / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    slstm_every: int = 0  # xlstm: every k-th layer is sLSTM
+    shared_attn_every: int = 0  # zamba2: shared attention block period
+    chunk_size: int = 256
+
+    # encoder (hubert) / vlm (paligemma) stub frontends
+    frame_dim: int = 0  # audio frame embedding dim
+    mask_prob: float = 0.08
+    num_patches: int = 0  # vision patches
+    patch_dim: int = 0
+
+    # numerics / training
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "none"  # none | full | dots
+    optimizer: str = "adamw"
+    learning_rate: float = 3e-4
+
+    # serving
+    max_cache_len: int = 0
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY = {}
+
+
+def register(full_cfg: ModelConfig, smoke_cfg: ModelConfig):
+    _REGISTRY[full_cfg.arch] = (full_cfg, smoke_cfg)
+    return full_cfg
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    # import side-effect registration
+    from . import _load_all  # noqa
+
+    _load_all()
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch][1 if smoke else 0]
+
+
+def list_archs():
+    from . import _load_all  # noqa
+
+    _load_all()
+    return sorted(_REGISTRY)

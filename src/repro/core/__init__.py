@@ -1,0 +1,69 @@
+"""Core library: the paper's contribution.
+
+Minimal Cost FL Schedule problem (Def. 1), the (MC)^2MKP knapsack problem and
+its DP solution (Alg. 1), the monotone-regime algorithms MarIn/MarCo/
+MarDecUn/MarDec (Algs. 2-7), cost-function families, and baselines.
+"""
+
+from .baselines import greedy_marginal, olar, proportional, random_schedule, uniform
+from .costs import (
+    DEVICE_CLASSES,
+    device_fleet_problem,
+    linear_cost,
+    measured_cost,
+    random_problem,
+    sublinear_cost,
+    superlinear_cost,
+)
+from .jax_dp import solve_schedule_dp_jax
+from .marginal import marco, mardec, mardecun, marin
+from .mc2mkp import (
+    ItemClass,
+    MC2MKPSolution,
+    brute_force_schedule,
+    mc2mkp_matrices,
+    solve_mc2mkp,
+    solve_schedule_dp,
+)
+from .problem import (
+    Problem,
+    remove_lower_limits,
+    restore_lower_limits,
+    total_cost,
+    validate_schedule,
+)
+from .scheduler import ALGORITHMS, schedule, select_algorithm
+
+__all__ = [
+    "Problem",
+    "remove_lower_limits",
+    "restore_lower_limits",
+    "total_cost",
+    "validate_schedule",
+    "ItemClass",
+    "MC2MKPSolution",
+    "solve_mc2mkp",
+    "mc2mkp_matrices",
+    "solve_schedule_dp",
+    "solve_schedule_dp_jax",
+    "brute_force_schedule",
+    "marin",
+    "marco",
+    "mardecun",
+    "mardec",
+    "olar",
+    "uniform",
+    "proportional",
+    "random_schedule",
+    "greedy_marginal",
+    "schedule",
+    "select_algorithm",
+    "ALGORITHMS",
+    "DEVICE_CLASSES",
+    "device_fleet_problem",
+    "linear_cost",
+    "superlinear_cost",
+    "sublinear_cost",
+    "measured_cost",
+    "random_problem",
+]

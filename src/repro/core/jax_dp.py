@@ -1,0 +1,76 @@
+"""JAX implementation of the (MC)^2MKP dynamic program for scheduling
+instances (contiguous classes), built on the min-plus convolution kernel.
+
+The DP row update over classes is a ``lax.scan``; each step is one banded
+min-plus convolution (``repro.kernels``). Backtracking is a reverse
+``lax.scan`` over the stacked argmin matrix, so the whole solver is a single
+jittable program — this is what runs server-side every FL round when
+schedules are recomputed from refreshed energy estimates.
+
+Inputs are the 0-lower-limit equivalent instance (Section 5.2) as dense
+arrays: ``costs (n, W)`` padded with BIG beyond each ``U_i``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ops import BIG, minplus_step
+from .problem import Problem, remove_lower_limits, restore_lower_limits
+
+__all__ = ["solve_schedule_dp_jax", "dp_tables_jax", "pack_problem"]
+
+
+def pack_problem(p0: Problem):
+    """Dense (n, W) cost matrix for a 0-lower-limit instance; entries beyond
+    U_i are BIG so those items are never selected."""
+    W = int(p0.upper.max()) + 1
+    n = p0.n
+    costs = np.full((n, W), float(BIG), dtype=np.float32)
+    for i in range(n):
+        u = int(p0.upper[i])
+        costs[i, : u + 1] = p0.cost_tables[i][: u + 1]
+    return jnp.asarray(costs)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "backend"))
+def dp_tables_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
+    """Scans the DP over classes. Returns (K_last (T+1,), I (n, T+1))."""
+
+    def step(krow, cost_i):
+        kout, iout = minplus_step(krow, cost_i, backend=backend)
+        return kout, iout
+
+    # Z_0: only capacity 0 is packable at zero cost.
+    k0 = jnp.full((T + 1,), BIG, jnp.float32).at[0].set(0.0)
+    k_last, I = jax.lax.scan(step, k0, costs)
+    return k_last, I
+
+
+@functools.partial(jax.jit, static_argnames=("T",))
+def backtrack_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
+    """Reverse scan: x_i = I[i, t]; t -= x_i (weights == item index)."""
+
+    def step(t, irow):
+        j = irow[t]
+        return t - j, j
+
+    _, xs_rev = jax.lax.scan(step, t_star.astype(jnp.int32), I[::-1])
+    return xs_rev[::-1]
+
+
+def solve_schedule_dp_jax(problem: Problem, backend: str = "ref") -> np.ndarray:
+    """Drop-in replacement for :func:`repro.core.mc2mkp.solve_schedule_dp`
+    running as a jitted JAX program (optionally via the Pallas kernel)."""
+    problem.validate()
+    p0 = remove_lower_limits(problem)
+    costs = pack_problem(p0)
+    k_last, I = dp_tables_jax(costs, int(p0.T), backend=backend)
+    # Scheduling instances always fill the knapsack: T* == T.
+    t_star = jnp.asarray(p0.T)
+    x0 = np.asarray(jax.device_get(backtrack_jax(I, t_star, int(p0.T))))
+    return restore_lower_limits(problem, x0.astype(np.int64))

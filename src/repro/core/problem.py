@@ -1,0 +1,178 @@
+"""Minimal Cost FL Schedule problem (paper Definition 1).
+
+An instance ``(R, T, U, L, C)``:
+  - ``n`` heterogeneous resources,
+  - workload of ``T`` identical, independent, atomic tasks,
+  - per-resource lower/upper limits ``L_i <= x_i <= U_i``,
+  - per-resource cost functions ``C_i : [L_i, U_i] -> R>=0``.
+
+Goal: schedule ``X = (x_1..x_n)`` with ``sum x_i == T`` minimizing
+``sum_i C_i(x_i)``.
+
+Cost functions are represented as dense tables over ``[0, U_i]`` (entries
+below ``L_i`` are present but never selected) so that all algorithms —
+including the (MC)^2MKP dynamic program and the Pallas min-plus kernel —
+can consume them as arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Problem",
+    "Schedule",
+    "remove_lower_limits",
+    "restore_lower_limits",
+    "total_cost",
+    "validate_schedule",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """A Minimal Cost FL Schedule instance.
+
+    Attributes:
+      T: number of tasks to schedule.
+      lower: ``(n,)`` int array of lower limits ``L_i``.
+      upper: ``(n,)`` int array of upper limits ``U_i``.
+      cost_tables: list of ``(U_i + 1,)`` float arrays; ``cost_tables[i][j]``
+        is ``C_i(j)``. Values for ``j < L_i`` exist but are never selected.
+    """
+
+    T: int
+    lower: np.ndarray
+    upper: np.ndarray
+    cost_tables: tuple
+
+    def __post_init__(self):
+        object.__setattr__(self, "lower", np.asarray(self.lower, dtype=np.int64))
+        object.__setattr__(self, "upper", np.asarray(self.upper, dtype=np.int64))
+        object.__setattr__(
+            self,
+            "cost_tables",
+            tuple(np.asarray(c, dtype=np.float64) for c in self.cost_tables),
+        )
+
+    @property
+    def n(self) -> int:
+        return len(self.cost_tables)
+
+    def cost(self, i: int, j: int) -> float:
+        return float(self.cost_tables[i][j])
+
+    def validate(self) -> None:
+        """Checks the instance is valid & non-trivial (paper Section 3)."""
+        if self.n == 0:
+            raise ValueError("need at least one resource")
+        if len(self.lower) != self.n or len(self.upper) != self.n:
+            raise ValueError("limits and cost tables disagree on n")
+        if np.any(self.lower < 0):
+            raise ValueError("lower limits must be non-negative")
+        if np.any(self.upper < self.lower):
+            raise ValueError("upper limit below lower limit")
+        for i, tbl in enumerate(self.cost_tables):
+            if len(tbl) != self.upper[i] + 1:
+                raise ValueError(
+                    f"cost table {i} has {len(tbl)} entries, expected U_i+1="
+                    f"{self.upper[i] + 1}"
+                )
+        if not (int(self.lower.sum()) <= self.T <= int(self.upper.sum())):
+            raise ValueError(
+                f"T={self.T} outside feasible range "
+                f"[{int(self.lower.sum())}, {int(self.upper.sum())}]"
+            )
+
+    # ---- constructors -------------------------------------------------
+
+    @staticmethod
+    def from_functions(
+        T: int,
+        lower: Sequence[int],
+        upper: Sequence[int],
+        fns: Sequence[Callable[[int], float]],
+    ) -> "Problem":
+        """Tabulates callables ``C_i`` over ``[0, U_i]``."""
+        tables = [
+            np.array([float(f(j)) for j in range(int(u) + 1)]) for f, u in zip(fns, upper)
+        ]
+        return Problem(T=T, lower=np.asarray(lower), upper=np.asarray(upper), cost_tables=tuple(tables))
+
+    def marginal_costs(self, i: int) -> np.ndarray:
+        """Marginal cost function M_i over [L_i, U_i] (paper eq. 6).
+
+        ``M_i(L_i) = 0`` by definition; ``M_i(j) = C_i(j) - C_i(j-1)``.
+        Returned array is indexed by absolute j in ``[0, U_i]`` with entries
+        below ``L_i`` set to 0 (never used).
+        """
+        tbl = self.cost_tables[i]
+        m = np.zeros_like(tbl)
+        lo = int(self.lower[i])
+        if lo + 1 <= int(self.upper[i]):
+            m[lo + 1 :] = tbl[lo + 1 :] - tbl[lo:-1]
+        return m
+
+    def regime(self, atol: float = 1e-9) -> str:
+        """Classifies marginal-cost behaviour: 'increasing' | 'constant' |
+        'decreasing' | 'arbitrary' (paper Definition 3)."""
+        inc = con = dec = True
+        for i in range(self.n):
+            lo, up = int(self.lower[i]), int(self.upper[i])
+            if up - lo < 2:
+                continue  # fewer than two marginals: consistent with anything
+            m = self.marginal_costs(i)[lo + 1 : up + 1]
+            d = np.diff(m)
+            if np.any(d < -atol):
+                inc = False
+            if np.any(np.abs(d) > atol):
+                con = False
+            if np.any(d > atol):
+                dec = False
+        if con:
+            return "constant"
+        if inc:
+            return "increasing"
+        if dec:
+            return "decreasing"
+        return "arbitrary"
+
+
+Schedule = np.ndarray  # (n,) int array of assignments x_i
+
+
+def total_cost(problem: Problem, x: Schedule) -> float:
+    return float(sum(problem.cost(i, int(x[i])) for i in range(problem.n)))
+
+
+def validate_schedule(problem: Problem, x: Schedule) -> None:
+    x = np.asarray(x)
+    if x.shape != (problem.n,):
+        raise ValueError(f"schedule shape {x.shape} != ({problem.n},)")
+    if int(x.sum()) != problem.T:
+        raise ValueError(f"schedule assigns {int(x.sum())} tasks, T={problem.T}")
+    if np.any(x < problem.lower) or np.any(x > problem.upper):
+        raise ValueError("schedule violates limits")
+
+
+def remove_lower_limits(problem: Problem) -> Problem:
+    """Equivalent instance with all lower limits shifted to zero.
+
+    Paper Section 5.2, eqs. (8)-(10):
+      T' = T - sum L_i;  U'_i = U_i - L_i;  C'_i(j) = C_i(j + L_i) - C_i(L_i).
+    """
+    Tp = problem.T - int(problem.lower.sum())
+    upper = problem.upper - problem.lower
+    tables = tuple(
+        tbl[int(lo) :] - tbl[int(lo)]
+        for tbl, lo in zip(problem.cost_tables, problem.lower)
+    )
+    return Problem(T=Tp, lower=np.zeros(problem.n, dtype=np.int64), upper=upper, cost_tables=tables)
+
+
+def restore_lower_limits(problem: Problem, x_prime: Schedule) -> Schedule:
+    """Paper eq. (11): x_i = x'_i + L_i."""
+    return np.asarray(x_prime) + problem.lower

@@ -1,0 +1,122 @@
+"""Unified scheduling API: regime detection + algorithm dispatch.
+
+``schedule(problem, algorithm="auto")`` picks the lowest-complexity optimal
+algorithm for the detected marginal-cost regime (paper Table 2):
+
+  regime      | no binding upper limits | with upper limits
+  ------------|-------------------------|-------------------
+  increasing  | MarIn                   | MarIn
+  constant    | MarDecUn*               | MarCo
+  decreasing  | MarDecUn                | MarDec
+  arbitrary   | (MC)^2MKP DP            | (MC)^2MKP DP
+
+(*constant marginals without upper limits: MarDecUn's Θ(n) single-resource
+assignment is optimal there too, per Table 2.)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from . import baselines
+from .jax_dp import solve_schedule_dp_jax
+from .marginal import marco, mardec, mardecun, marin
+from .mc2mkp import solve_schedule_dp
+from .problem import Problem, total_cost, validate_schedule
+
+__all__ = ["schedule", "ALGORITHMS", "select_algorithm"]
+
+ALGORITHMS: Dict[str, Callable] = {
+    "dp": solve_schedule_dp,
+    "dp_jax": solve_schedule_dp_jax,
+    "dp_jax_pallas": lambda p: solve_schedule_dp_jax(p, backend="pallas"),
+    "marin": marin,
+    "marco": marco,
+    "mardecun": mardecun,
+    "mardec": mardec,
+    # baselines (not total-cost-optimal in general; for comparison)
+    "olar": baselines.olar,
+    "uniform": baselines.uniform,
+    "proportional": baselines.proportional,
+    "greedy_marginal": baselines.greedy_marginal,
+}
+
+
+def select_algorithm(problem: Problem) -> str:
+    regime = problem.regime()
+    unlimited = bool(np.all(problem.upper - problem.lower >= problem.T - int(problem.lower.sum())))
+    if regime == "increasing":
+        return "marin"
+    if regime == "constant":
+        return "mardecun" if unlimited else "marco"
+    if regime == "decreasing":
+        return "mardecun" if unlimited else "mardec"
+    return "dp"
+
+
+def schedule(problem: Problem, algorithm: str = "auto", check: bool = True) -> np.ndarray:
+    if algorithm == "auto":
+        algorithm = select_algorithm(problem)
+    try:
+        fn = ALGORITHMS[algorithm]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {algorithm!r}; options: auto, {sorted(ALGORITHMS)}")
+    x = fn(problem)
+    if check:
+        validate_schedule(problem, x)
+    return x
+
+
+def schedule_cost(problem: Problem, algorithm: str = "auto") -> float:
+    return total_cost(problem, schedule(problem, algorithm))
+
+
+def schedule_with_deadline(
+    problem: Problem,
+    time_tables,
+    deadline: float,
+    algorithm: str = "auto",
+) -> np.ndarray:
+    """Energy-minimal schedule subject to a round deadline (beyond-paper).
+
+    The paper optimizes energy alone and cites time/energy bi-objective work
+    ([28]) as related; the epsilon-constraint version reduces cleanly to the
+    SAME problem: a deadline on each device's computation time is just a
+    tighter upper limit ``U_i' = max{j : time_i(j) <= deadline}`` — the
+    feasible sets stay intervals, so every optimal algorithm applies
+    unchanged.
+
+    Args:
+      time_tables: list of (U_i+1,) arrays; time_tables[i][j] = seconds for
+        device i to train j batches (monotone non-decreasing).
+      deadline: maximum allowed per-device time (the target round duration).
+
+    Raises ValueError if the deadline makes the instance infeasible.
+    """
+    new_upper = []
+    for i in range(problem.n):
+        t = np.asarray(time_tables[i], dtype=np.float64)
+        feas = np.nonzero(t <= deadline)[0]
+        u = int(feas.max()) if len(feas) else -1
+        if u < int(problem.lower[i]):
+            raise ValueError(
+                f"deadline {deadline} infeasible: device {i} cannot do its "
+                f"lower limit {int(problem.lower[i])} batches in time"
+            )
+        new_upper.append(min(u, int(problem.upper[i])))
+    if sum(new_upper) < problem.T:
+        raise ValueError(
+            f"deadline {deadline} infeasible: fleet capacity "
+            f"{sum(new_upper)} < T={problem.T}"
+        )
+    tight = Problem(
+        T=problem.T,
+        lower=problem.lower,
+        upper=np.asarray(new_upper),
+        cost_tables=tuple(
+            tbl[: u + 1] for tbl, u in zip(problem.cost_tables, new_upper)
+        ),
+    )
+    return schedule(tight, algorithm)

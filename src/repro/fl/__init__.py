@@ -1,0 +1,9 @@
+from .client import local_train, make_client_fn
+from .energy import DeviceProfile, EnergyEstimator, make_fleet
+from .rounds import CampaignHistory, run_campaign
+from .server import FederatedServer, FLRoundResult
+
+__all__ = [
+    "local_train", "make_client_fn", "DeviceProfile", "EnergyEstimator",
+    "make_fleet", "FederatedServer", "FLRoundResult", "CampaignHistory", "run_campaign",
+]

@@ -1,0 +1,69 @@
+"""Client-side local training as a masked, fixed-shape ``lax.scan``.
+
+Heterogeneous per-client step counts (the scheduler's ``x_i``) must not
+change program shapes, so every client scans over ``max_steps`` batches and
+steps beyond ``x_i`` are no-ops (params carried through unchanged). This
+keeps a whole FL round one SPMD program — clients are a ``vmap`` axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.optimizers import Optimizer, apply_updates
+
+__all__ = ["local_train", "make_client_fn"]
+
+
+def local_train(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    optimizer: Optimizer,
+    params: Any,
+    batches: Any,
+    num_steps: jnp.ndarray,
+):
+    """Runs ``num_steps`` (<= max_steps) local updates.
+
+    Args:
+      loss_fn: ``loss_fn(params, batch) -> scalar``.
+      optimizer: client-local optimizer (state re-initialized every round, as
+        FedAvg clients are stateless between rounds).
+      params: starting (global) parameters.
+      batches: pytree with leading ``(max_steps, ...)`` axis.
+      num_steps: scalar int32 — the scheduler's ``x_i`` for this client.
+
+    Returns:
+      (final_params, mean_loss) — mean over the *executed* steps only
+      (0.0 if num_steps == 0).
+    """
+    opt_state = optimizer.init(params)
+    max_steps = jax.tree.leaves(batches)[0].shape[0]
+
+    def step(carry, inp):
+        p, s_opt, loss_acc = carry
+        batch, s = inp
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        updates, new_opt = optimizer.update(grads, s_opt, p)
+        new_p = apply_updates(p, updates)
+        use = s < num_steps
+        p = jax.tree.map(lambda new, old: jnp.where(use, new, old), new_p, p)
+        s_opt = jax.tree.map(lambda new, old: jnp.where(use, new, old), new_opt, s_opt)
+        loss_acc = loss_acc + jnp.where(use, loss, 0.0)
+        return (p, s_opt, loss_acc), loss
+
+    xs = (batches, jnp.arange(max_steps, dtype=jnp.int32))
+    (final_params, _, loss_sum), _ = jax.lax.scan(step, (params, opt_state, jnp.zeros(())), xs)
+    denom = jnp.maximum(num_steps.astype(jnp.float32), 1.0)
+    return final_params, loss_sum / denom
+
+
+def make_client_fn(loss_fn: Callable, optimizer: Optimizer):
+    """vmappable closure: (params, batches, num_steps) -> (params, loss)."""
+
+    def client_fn(params, batches, num_steps):
+        return local_train(loss_fn, optimizer, params, batches, num_steps)
+
+    return client_fn

@@ -1,0 +1,121 @@
+"""Device energy modeling, measurement simulation, and online estimation.
+
+The scheduler needs per-device cost tables ``C_i(j)`` = Joules to train with
+``j`` mini-batches. On a real deployment these come from profilers (paper
+refs: I-Prof [35], Flower [36], PMC models [34]). Here:
+
+  * :class:`DeviceProfile` — ground-truth energy behaviour of a simulated
+    device (hidden from the scheduler), with measurement noise.
+  * :class:`EnergyEstimator` — what the server knows: per-device tabulated
+    estimates refreshed each round from noisy measurements via an EMA
+    (dynamic re-estimation is listed as future work in the paper §6; we flag
+    it beyond-paper in DESIGN.md §8).
+  * :func:`flops_scaled_tables` — adapts a reference cost table to a model's
+    per-batch FLOPs (bigger model => proportionally more Joules per batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.costs import DEVICE_CLASSES, _table_for_class
+from ..core.problem import Problem
+
+__all__ = ["DeviceProfile", "EnergyEstimator", "make_fleet", "flops_scaled_tables"]
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    """Ground truth for one simulated device."""
+
+    name: str
+    device_class: str
+    max_batches: int  # upper limit U_i (local data / contract)
+    min_batches: int = 0  # lower limit L_i (participation floor)
+    noise: float = 0.03  # relative measurement noise
+    flops_scale: float = 1.0
+
+    def true_table(self) -> np.ndarray:
+        return _table_for_class(self.device_class, self.max_batches, self.flops_scale)
+
+    def measure(self, j: int, rng: np.random.Generator) -> float:
+        """Simulates an energy measurement for training with j batches."""
+        true = float(self.true_table()[j])
+        return true * float(1.0 + self.noise * rng.standard_normal())
+
+
+def make_fleet(
+    rng: np.random.Generator,
+    n_devices: int,
+    classes: Optional[Sequence[str]] = None,
+    max_batches: int = 64,
+    min_batches: int = 0,
+) -> list:
+    classes = list(classes or DEVICE_CLASSES)
+    out = []
+    for i in range(n_devices):
+        cls = classes[int(rng.integers(0, len(classes)))]
+        ub = int(rng.integers(max(min_batches + 1, max_batches // 2), max_batches + 1))
+        out.append(
+            DeviceProfile(
+                name=f"dev{i:03d}_{cls}",
+                device_class=cls,
+                max_batches=ub,
+                min_batches=min_batches,
+            )
+        )
+    return out
+
+
+def flops_scaled_tables(table: np.ndarray, model_flops_per_batch: float, ref_flops_per_batch: float) -> np.ndarray:
+    return table * (model_flops_per_batch / ref_flops_per_batch)
+
+
+class EnergyEstimator:
+    """Server-side estimate of every device's cost table.
+
+    Starts from a coarse linear prior (first measured marginal extrapolated),
+    then blends full-table measurements with an EMA as rounds progress. The
+    estimate is what the scheduler consumes; the *true* table is what the
+    simulator charges — the gap is reported by ``fl/rounds.py``.
+    """
+
+    def __init__(self, fleet: Sequence[DeviceProfile], ema: float = 0.5):
+        self.fleet = list(fleet)
+        self.ema = ema
+        self._tables = [None] * len(self.fleet)
+
+    def calibrate(self, rng: np.random.Generator, probe_points: int = 4) -> None:
+        """Initial profiling pass: probe a few j values per device and fit a
+        monotone (isotonic-ish, via cumulative positive increments) table."""
+        for i, dev in enumerate(self.fleet):
+            u = dev.max_batches
+            js = np.unique(np.linspace(1, u, min(probe_points, u)).astype(int))
+            meas = np.array([dev.measure(int(j), rng) for j in js])
+            full = np.interp(np.arange(u + 1), np.concatenate([[0], js]), np.concatenate([[0.0], meas]))
+            inc = np.maximum(np.diff(full), 0.0)  # enforce monotone energy
+            self._tables[i] = np.concatenate([[0.0], np.cumsum(inc)])
+
+    def observe(self, i: int, j: int, measured_joules: float) -> None:
+        """EMA update of device i's table around the observed point: rescales
+        the whole table so that C_i(j) matches the blended observation."""
+        tbl = self._tables[i]
+        if tbl is None or j <= 0 or tbl[j] <= 0:
+            return
+        blended = (1 - self.ema) * tbl[j] + self.ema * measured_joules
+        self._tables[i] = tbl * (blended / tbl[j])
+
+    def problem(self, T: int) -> Problem:
+        lowers = np.array([d.min_batches for d in self.fleet])
+        uppers = np.array([d.max_batches for d in self.fleet])
+        tables = tuple(np.asarray(t, dtype=np.float64) for t in self._tables)
+        return Problem(T=T, lower=lowers, upper=uppers, cost_tables=tables)
+
+    def true_problem(self, T: int) -> Problem:
+        lowers = np.array([d.min_batches for d in self.fleet])
+        uppers = np.array([d.max_batches for d in self.fleet])
+        tables = tuple(d.true_table() for d in self.fleet)
+        return Problem(T=T, lower=lowers, upper=uppers, cost_tables=tables)

@@ -1,0 +1,61 @@
+"""FL campaign driver: multi-round orchestration + energy accounting."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from ..data.pipeline import lm_round_batches
+from .server import FederatedServer, FLRoundResult
+
+__all__ = ["CampaignHistory", "run_campaign"]
+
+
+@dataclasses.dataclass
+class CampaignHistory:
+    algorithm: str
+    rounds: List[FLRoundResult]
+
+    @property
+    def total_energy(self) -> float:
+        return float(sum(r.energy_joules for r in self.rounds))
+
+    @property
+    def losses(self) -> np.ndarray:
+        return np.array([r.mean_loss for r in self.rounds])
+
+    def summary(self) -> dict:
+        return {
+            "algorithm": self.algorithm,
+            "rounds": len(self.rounds),
+            "total_energy_J": self.total_energy,
+            "final_loss": float(self.rounds[-1].mean_loss) if self.rounds else float("nan"),
+            "mean_makespan_J": float(np.mean([r.makespan_joules for r in self.rounds])) if self.rounds else 0.0,
+        }
+
+
+def run_campaign(
+    server: FederatedServer,
+    examples_per_client: list,
+    num_rounds: int,
+    round_T: int,
+    batch_size: int,
+    rng: np.random.Generator,
+    max_steps: Optional[int] = None,
+    on_round: Optional[Callable[[FLRoundResult], None]] = None,
+) -> CampaignHistory:
+    """Runs ``num_rounds`` FedAvg rounds with ``round_T`` total mini-batches
+    scheduled across clients each round."""
+    server.round_T = round_T
+    if max_steps is None:
+        max_steps = max(d.max_batches for d in server.estimator.fleet)
+    results = []
+    for r in range(num_rounds):
+        batches = lm_round_batches(examples_per_client, max_steps, batch_size, r)
+        res = server.run_round(r, batches, rng)
+        results.append(res)
+        if on_round:
+            on_round(res)
+    return CampaignHistory(algorithm=server.algorithm, rounds=results)

@@ -1,0 +1,138 @@
+"""FedAvg server with energy-minimal workload scheduling.
+
+Per round (McMahan et al. [1] + this paper's contribution):
+  1. The server asks the :class:`~repro.fl.energy.EnergyEstimator` for the
+     fleet's cost tables and solves the Minimal Cost FL Schedule problem for
+     the round's workload ``T`` (total mini-batches) — ``x_i`` per client.
+  2. All clients execute one jitted SPMD program: ``vmap`` over clients of a
+     masked local-training scan (``fl/client.py``).
+  3. Aggregation: data-weighted parameter average (weights ``x_i / T``);
+     clients with ``x_i = 0`` contribute nothing.
+  4. The simulator charges each device its TRUE energy for ``x_i`` batches
+     (with measurement noise fed back to the estimator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.problem import total_cost
+from ..core.scheduler import schedule
+from ..optim.optimizers import Optimizer
+from .client import make_client_fn
+from .energy import EnergyEstimator
+
+__all__ = ["FLRoundResult", "FederatedServer"]
+
+
+@dataclasses.dataclass
+class FLRoundResult:
+    round_index: int
+    assignments: np.ndarray  # x_i
+    mean_loss: float  # data-weighted mean client loss
+    energy_joules: float  # true total energy charged
+    estimated_joules: float  # what the scheduler thought it would cost
+    makespan_joules: float  # max per-device energy (OLAR's objective, for contrast)
+
+
+class FederatedServer:
+    def __init__(
+        self,
+        loss_fn: Callable[[Any, Any], jnp.ndarray],
+        init_params: Any,
+        client_optimizer: Optimizer,
+        estimator: EnergyEstimator,
+        algorithm: str = "auto",
+        participation_floor: Optional[int] = None,
+    ):
+        self.params = init_params
+        self.estimator = estimator
+        self.algorithm = algorithm
+        self.n_clients = len(estimator.fleet)
+        if participation_floor is not None:
+            for d in estimator.fleet:
+                d.min_batches = participation_floor
+
+        client_fn = make_client_fn(loss_fn, client_optimizer)
+
+        def round_fn(params, batches, num_steps):
+            # clients share the same starting params (in_axes=None broadcast)
+            client_params, client_loss = jax.vmap(client_fn, in_axes=(None, 0, 0))(
+                params, batches, num_steps
+            )
+            w = num_steps.astype(jnp.float32)
+            w = w / jnp.maximum(w.sum(), 1.0)
+            new_params = jax.tree.map(
+                lambda cp, p: jnp.tensordot(w, cp.astype(jnp.float32), axes=(0, 0)).astype(p.dtype),
+                client_params,
+                params,
+            )
+            mean_loss = jnp.sum(w * client_loss)
+            return new_params, mean_loss
+
+        self._round_fn = jax.jit(round_fn)
+
+    def run_round(
+        self,
+        round_index: int,
+        batches: np.ndarray,
+        rng: np.random.Generator,
+        unavailable=None,
+    ) -> FLRoundResult:
+        """One FedAvg round.
+
+        ``unavailable``: optional iterable of client indices that dropped out
+        before this round (paper §6 "loss of a device" future-work item):
+        their limits collapse to 0 and the workload is rescheduled over the
+        remaining fleet — shrunk to the surviving capacity if necessary.
+        """
+        T = self._round_T(batches)
+        est_problem = self.estimator.problem(T)
+        if unavailable:
+            dropped = set(int(i) for i in unavailable)
+            lower = np.where([i in dropped for i in range(self.n_clients)], 0, est_problem.lower)
+            upper = np.where([i in dropped for i in range(self.n_clients)], 0, est_problem.upper)
+            tables = tuple(
+                np.zeros(1) if i in dropped else tbl
+                for i, tbl in enumerate(est_problem.cost_tables)
+            )
+            T_eff = min(T, int(upper.sum()))
+            from ..core.problem import Problem
+
+            est_problem = Problem(T=T_eff, lower=lower, upper=upper, cost_tables=tables)
+        x = schedule(est_problem, self.algorithm)
+        est_cost = total_cost(est_problem, x)
+
+        num_steps = jnp.asarray(x, dtype=jnp.int32)
+        self.params, mean_loss = self._round_fn(self.params, jnp.asarray(batches), num_steps)
+
+        # charge true energy + feed measurements back
+        true_problem = self.estimator.true_problem(T)
+        true_cost = total_cost(true_problem, x)
+        per_dev = [true_problem.cost(i, int(x[i])) for i in range(self.n_clients)]
+        for i, dev in enumerate(self.estimator.fleet):
+            if x[i] > 0:
+                self.estimator.observe(i, int(x[i]), dev.measure(int(x[i]), rng))
+        return FLRoundResult(
+            round_index=round_index,
+            assignments=np.asarray(x),
+            mean_loss=float(mean_loss),
+            energy_joules=float(true_cost),
+            estimated_joules=float(est_cost),
+            makespan_joules=float(max(per_dev)),
+        )
+
+    def _round_T(self, batches) -> int:
+        """Round workload: total batches to schedule = what the round tensor
+        can hold at most per client, times a utilization target — here simply
+        the configured T stored on the server by the driver."""
+        if not hasattr(self, "round_T"):
+            # default: half the total capacity of the round tensor
+            n, s = batches.shape[0], batches.shape[1]
+            return (n * s) // 2
+        return self.round_T

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+``minplus``: banded min-plus (tropical) convolution — the inner relaxation of
+the (MC)^2MKP dynamic program. ``ops`` exposes the dispatching wrapper,
+``ref`` the pure-jnp oracle used by the correctness sweeps.
+
+``flash_attention``: FlashAttention-2-style fused attention (fwd + bwd) —
+attention probabilities never touch HBM; selected via ``attn_impl='pallas'``.
+"""
+
+from .flash_attention import flash_attention
+from .minplus import minplus_pallas
+from .ops import BIG, minplus_step
+from .ref import minplus_step_ref
+
+__all__ = ["minplus_step", "minplus_pallas", "minplus_step_ref", "BIG", "flash_attention"]

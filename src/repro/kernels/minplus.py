@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: banded min-plus (tropical) convolution for the
+(MC)^2MKP dynamic program.
+
+TPU adaptation (see DESIGN.md §3): the DP relaxation is not a matmul, so the
+MXU is of no use — this is a VPU kernel. We tile the *output* row into
+``BT``-sized blocks held in VMEM; the previous DP row is kept whole in VMEM
+(rows are ``4·(T+1)`` bytes — up to ~4 MB for T = 1M, within the 16 MB VMEM
+budget for realistic scheduling sizes) with a ``W``-entry BIG prefix so every
+banded read is an in-bounds dynamic slice. The inner ``fori_loop`` walks the
+band, performing length-``BT`` vector min/argmin updates — (8,128)-friendly
+when ``BT`` is a multiple of 1024.
+
+Layout:
+  kprev_pad : (W + Tp,)  previous row, first W entries = BIG
+  cost      : (W,)       class cost table, padded with BIG
+  out tiles : (BT,) values + (BT,) int32 argmin
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BIG
+
+__all__ = ["minplus_pallas", "DEFAULT_BT"]
+
+DEFAULT_BT = 1024  # 8 sublanes x 128 lanes
+
+
+def _minplus_kernel(kprev_pad_ref, cost_ref, kout_ref, iout_ref, *, BT: int, W: int):
+    ot = pl.program_id(0)
+    base = ot * BT  # absolute t of this tile's first element
+
+    def body(j, carry):
+        best, best_idx = carry
+        # window[dt] = kprev_pad[W + base + dt - j]  == K_{i-1}[base + dt - j]
+        start = W + base - j
+        window = kprev_pad_ref[pl.dslice(start, BT)]
+        cand = window + cost_ref[j]
+        cand = jnp.where(cand >= BIG, BIG, cand)
+        improved = cand < best
+        best = jnp.where(improved, cand, best)
+        best_idx = jnp.where(improved, jnp.full((BT,), j, jnp.int32), best_idx)
+        return best, best_idx
+
+    init = (jnp.full((BT,), BIG, jnp.float32), jnp.zeros((BT,), jnp.int32))
+    best, best_idx = jax.lax.fori_loop(0, W, body, init)
+    kout_ref[...] = best
+    iout_ref[...] = best_idx
+
+
+@functools.partial(jax.jit, static_argnames=("BT", "interpret"))
+def minplus_pallas(
+    kprev: jnp.ndarray,
+    cost: jnp.ndarray,
+    *,
+    BT: int = DEFAULT_BT,
+    interpret: bool = True,
+) -> tuple:
+    """One DP row update via Pallas. Same contract as
+    :func:`repro.kernels.ref.minplus_step_ref`.
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container has no TPU); on TPU hardware pass ``interpret=False``.
+    """
+    kprev = kprev.astype(jnp.float32)
+    cost = cost.astype(jnp.float32)
+    Tp = kprev.shape[0]
+    W = cost.shape[0]
+    pad_t = (-Tp) % BT
+    Tpad = Tp + pad_t
+    kprev_pad = jnp.concatenate(
+        [jnp.full((W,), BIG, jnp.float32), kprev, jnp.full((pad_t,), BIG, jnp.float32)]
+    )
+    grid = (Tpad // BT,)
+    kout, iout = pl.pallas_call(
+        functools.partial(_minplus_kernel, BT=BT, W=W),
+        grid=grid,
+        in_specs=[
+            # previous row stays whole in VMEM: every tile reads a sliding band
+            pl.BlockSpec(kprev_pad.shape, lambda ot: (0,)),
+            pl.BlockSpec(cost.shape, lambda ot: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BT,), lambda ot: (ot,)),
+            pl.BlockSpec((BT,), lambda ot: (ot,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tpad,), jnp.float32),
+            jax.ShapeDtypeStruct((Tpad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(kprev_pad, cost)
+    return kout[:Tp], iout[:Tp]

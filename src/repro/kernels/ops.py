@@ -1,0 +1,26 @@
+"""Public jit'd entry points for the kernels package.
+
+``minplus_step(kprev, cost, backend=...)`` dispatches between the pure-jnp
+reference (`backend="ref"`, default — runs everywhere) and the Pallas kernel
+(`backend="pallas"`, interpret-mode on CPU; `backend="pallas_tpu"` compiles
+for real TPU hardware).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .minplus import minplus_pallas
+from .ref import BIG, minplus_step_ref
+
+__all__ = ["minplus_step", "BIG"]
+
+
+def minplus_step(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "ref"):
+    if backend == "ref":
+        return minplus_step_ref(kprev, cost)
+    if backend == "pallas":
+        return minplus_pallas(kprev, cost, interpret=True)
+    if backend == "pallas_tpu":
+        return minplus_pallas(kprev, cost, interpret=False)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the banded min-plus (tropical) convolution.
+
+The (MC)^2MKP relaxation for one contiguous class (paper eq. 4, with
+``N_i = {0..U_i}``, ``w_ij = j``) is
+
+    K_i[t]   = min_{0 <= j <= min(W-1, t)}  K_{i-1}[t - j] + C_i[j]
+    I_i[t]   = argmin_j ...   (first minimum wins, matching Algorithm 1's
+                               strict-improvement update over ascending j)
+
+which is a min-plus convolution of the previous DP row with the class's cost
+table, banded to width ``W = U_i + 1``. This module is the reference
+implementation the Pallas kernel is validated against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["minplus_step_ref", "BIG"]
+
+# Large-but-finite stand-in for +inf: keeps arithmetic NaN-free in float32
+# while dominating any real cost (energy values in this codebase are << 1e30).
+# A plain Python float so Pallas kernels can close over it as a literal.
+BIG = 1e30
+
+
+def minplus_step_ref(kprev: jnp.ndarray, cost: jnp.ndarray):
+    """One DP row update.
+
+    Args:
+      kprev: ``(T+1,)`` previous row ``Z_{i-1}`` (BIG where infeasible).
+      cost:  ``(W,)`` class cost table ``C_i(0..U_i)`` padded with BIG.
+
+    Returns:
+      (kout, iout): ``(T+1,)`` new row and ``(T+1,)`` int32 argmin item j.
+    """
+    kprev = kprev.astype(jnp.float32)
+    cost = cost.astype(jnp.float32)
+    Tp = kprev.shape[0]
+    W = cost.shape[0]
+    t = jnp.arange(Tp)[:, None]  # (Tp, 1)
+    j = jnp.arange(W)[None, :]  # (1, W)
+    src = t - j  # index into kprev
+    valid = src >= 0
+    gathered = jnp.where(valid, kprev[jnp.clip(src, 0, Tp - 1)], BIG)
+    cand = gathered + cost[None, :]
+    cand = jnp.where(valid, cand, BIG)
+    # saturate: anything that touched BIG stays BIG (avoid BIG+x drift)
+    cand = jnp.where(cand >= BIG, BIG, cand)
+    kout = cand.min(axis=1)
+    iout = cand.argmin(axis=1).astype(jnp.int32)
+    return kout, iout

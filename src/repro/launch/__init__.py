@@ -1,0 +1,3 @@
+from .sharding import current_mesh, mesh_context, param_pspecs, set_mesh, shard
+
+__all__ = ["set_mesh", "current_mesh", "mesh_context", "shard", "param_pspecs"]

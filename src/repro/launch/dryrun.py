@@ -1,0 +1,210 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes and extract roofline terms.
+
+MUST be run as its own process (the device-count flag binds at first jax
+init). One combo per invocation:
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch deepseek-7b --shape train_4k --mesh pod \
+        --out artifacts/dryrun/deepseek-7b.train_4k.pod.json
+
+``--mesh pod`` = (data=16, model=16); ``--mesh multipod`` = (pod=2, 16, 16).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HW, collective_bytes, roofline_terms, roofline_terms_from_hlo
+from repro.launch.steps import (
+    abstract_opt_state,
+    abstract_params,
+    batch_pspecs,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+    cache_pspecs,
+    train_shardings,
+)
+from repro.models import init_cache, input_specs, supports_mode
+from repro.models.model import _batch_struct
+
+
+def configure(arch: str, shape: InputShape) -> tuple:
+    """Per-(arch, shape) config tweaks + sharding rules (DESIGN.md §5)."""
+    cfg = get_config(arch)
+    rules = {}
+    if shape.mode in ("train", "prefill"):
+        rules["act_seq"] = "model"  # sequence-parallel residual activations
+    if cfg.num_experts:
+        cfg = cfg.replace(moe_impl="a2a" if shape.mode in ("train", "prefill") else "einsum")
+        if cfg.num_experts >= 256:
+            rules["expert"] = ("data", "model")  # one expert per device
+    if shape.name == "long_500k" and cfg.attn_kind == "local_global":
+        cfg = cfg.replace(long_context=True)  # gemma2: all-sliding serving mode
+    return cfg, rules
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+              cfg_overrides: dict = None, rules_overrides: dict = None) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg, rules = configure(arch, shape)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    if rules_overrides:
+        rules.update(rules_overrides)
+    ok, reason = supports_mode(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode,
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd.set_mesh(mesh, rules)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    params_struct = abstract_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.mode == "train":
+        step, opt = build_train_step(cfg)
+        opt_struct = abstract_opt_state(cfg, params_struct)
+        batch_struct = _batch_struct(cfg, B, S, "train")
+        ps, os_, bs = train_shardings(cfg, params_struct, opt_struct, batch_struct, B)
+        jitted = jax.jit(
+            step, in_shardings=(ps, os_, bs), out_shardings=(ps, os_, None),
+            donate_argnums=(0, 1),  # params/opt state update in place
+        )
+        lowered = jitted.lower(params_struct, opt_struct, batch_struct)
+    elif shape.mode == "prefill":
+        step = build_prefill_step(cfg)
+        batch_struct = _batch_struct(cfg, B, S, "prefill")
+        pspecs = shd.param_pspecs(params_struct)
+        ns = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+        )
+        bs = ns(batch_pspecs(cfg, batch_struct, B))
+        jitted = jax.jit(step, in_shardings=(ns(pspecs), bs))
+        lowered = jitted.lower(params_struct, batch_struct)
+    else:  # decode
+        step = build_serve_step(cfg)
+        cache_struct = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        pspecs = shd.param_pspecs(params_struct)
+        cspecs = cache_pspecs(cfg, cache_struct, B, S)
+        ns = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+        )
+        tok_struct = jax.ShapeDtypeStruct((B, 1), jax.numpy.int32)
+        pos_struct = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        ba = batch_pspecs(cfg, tok_struct, B)
+        jitted = jax.jit(
+            step,
+            in_shardings=(ns(pspecs), ns(cspecs), ns(ba), NamedSharding(mesh, P())),
+            out_shardings=(ns(ba), ns(cspecs)),
+            donate_argnums=(1,),  # KV cache updated in place
+        )
+        lowered = jitted.lower(params_struct, cache_struct, tok_struct, pos_struct)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)  # static (loop bodies once) — for reference
+    terms = roofline_terms_from_hlo(hlo)  # loop-aware (the real numbers)
+    terms_static = roofline_terms(cost, coll)
+
+    # persist the partitioned HLO (zstd) so the analyzer can be improved and
+    # re-run WITHOUT recompiling
+    hlo_path = os.environ.get("DRYRUN_HLO_DIR")
+    if hlo_path:
+        import zstandard
+
+        os.makedirs(hlo_path, exist_ok=True)
+        fname = os.path.join(
+            hlo_path, f"{arch}.{shape_name}.{'multipod' if multi_pod else 'pod'}.hlo.zst"
+        )
+        with open(fname, "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(hlo.encode()))
+        result["hlo_file"] = fname
+
+    result.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        cost={k: cost.get(k) for k in ("flops", "bytes accessed", "transcendentals") if k in cost},
+        collectives=coll,
+        roofline=terms,
+        roofline_static=terms_static,
+    )
+    if verbose:
+        print(json.dumps({k: result[k] for k in ("arch", "shape", "mesh", "status")}))
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(
+            "  roofline: compute %.3es memory %.3es collective %.3es -> %s"
+            % (terms["t_compute_s"], terms["t_memory_s"], terms["t_collective_s"], terms["dominant"])
+        )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    try:
+        result = lower_one(args.arch, args.shape, args.mesh == "multipod")
+    except Exception as e:  # record failures as artifacts too
+        result = {
+            "arch": args.arch, "shape": args.shape,
+            "mesh": "2x16x16" if args.mesh == "multipod" else "16x16",
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(result["error"])
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    if result["status"] == "error":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Loop-aware cost analysis of optimized (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scan-over-layers models by ~L×. This walker parses the HLO
+module, builds the computation graph, and expands:
+
+  * ``while`` ops by their parsed trip count (the scalar constant in the
+    loop condition — scans lower to 0..N LT-loops),
+  * ``fusion`` / ``call`` / ``custom-call(calls=...)`` bodies (FLOPs only —
+    fusion internals don't touch HBM),
+
+accumulating per-device:
+  * flops        — exact dot FLOPs (2 * numel(result) * contraction size);
+    elementwise/transcendental FLOPs are ignored (dots dominate these
+    models by >100x),
+  * mem_bytes    — 2 * result bytes of every materialized (non-fused-
+    internal) op: a read+write HBM-traffic proxy,
+  * coll_bytes   — per collective type, with ring-algorithm multipliers
+    (see launch/roofline.py docstring).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+# op kind = first `word(` whose argument list starts with % or ) — robust to
+# tuple result types containing /*index=N*/ comments and layout annotations
+_OP_RE = re.compile(r"([\w\-]+)\(\s*(?:%|\)|\d|s32|f32|bf16|pred|u32)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*"n"\s*:\s*"(\d+)"')
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    rhs: str
+    result_bytes: int
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # %name -> shape text
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_counts: Dict[str, int] = field(default_factory=lambda: {c: 0 for c in _COLLECTIVES})
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def add(self, other: "HloCost", mult: float = 1.0, mem: bool = True):
+        self.flops += mult * other.flops
+        if mem:
+            self.mem_bytes += mult * other.mem_bytes
+        for c in _COLLECTIVES:
+            self.coll_bytes[c] += mult * other.coll_bytes[c]
+            self.coll_counts[c] += int(mult * other.coll_counts[c])
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Comp], str]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = _Comp(name=m.group(2))
+                if m.group(1):
+                    entry = cur.name
+                # parameters: "name: shape, name: shape"
+                for pm in re.finditer(r"([\w.\-]+)\s*:\s*([^,)]+(?:\([^)]*\))?)", m.group(3)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        cur.shapes[name] = rhs.split(" ", 1)[0] if rhs else ""
+        # cut metadata/backend_config off before searching for the op kind
+        head = rhs.split(", metadata=")[0]
+        om = _OP_RE.search(head)
+        kind = om.group(1) if om else ""
+        shape_part = head[: om.start(1)] if om else head
+        cur.ops.append(_Op(name=name, kind=kind, rhs=rhs, result_bytes=_shape_bytes(shape_part)))
+    return comps, entry
+
+
+def _dot_flops(comp: _Comp, op: _Op) -> float:
+    """2 * numel(result) * prod(contraction dims of lhs)."""
+    res_dims = _first_shape_dims(op.rhs)
+    if res_dims is None:
+        return 0.0
+    numel = 1
+    for d in res_dims:
+        numel *= d
+    cm = _LHS_CDIMS_RE.search(op.rhs)
+    if not cm:
+        return 2.0 * numel
+    cdims = [int(x) for x in cm.group(1).split(",")] if cm.group(1) else []
+    # lhs operand: first %name inside dot(...)
+    args = op.rhs[op.rhs.index("(") + 1 :]
+    am = re.search(r"%([\w.\-]+)", args)
+    contract = 1
+    if am and am.group(1) in comp.shapes:
+        lhs_dims = _first_shape_dims(comp.shapes[am.group(1)])
+        if lhs_dims:
+            for c in cdims:
+                if c < len(lhs_dims):
+                    contract *= lhs_dims[c]
+    return 2.0 * numel * contract
+
+
+def _operand_bytes(comp: _Comp, op: _Op, index: int) -> Optional[int]:
+    """Bytes of the index-th %operand of an op (resolved in-computation)."""
+    try:
+        args = op.rhs[op.rhs.index("(") + 1 :]
+    except ValueError:
+        return None
+    names = re.findall(r"%([\w.\-]+)", args)
+    if index >= len(names):
+        return None
+    shape_txt = comp.shapes.get(names[index])
+    return _shape_bytes(shape_txt) if shape_txt else None
+
+
+def _effective_write_bytes(comps: Dict[str, _Comp], comp: _Comp, op: _Op) -> int:
+    """HBM write size of an op. dynamic-update-slice (and fusions rooted in
+    one — scan stacking) writes only the UPDATE slice in place, not the whole
+    buffer; counting the full result would overstate scan-carry traffic by
+    the trip count."""
+    if op.kind == "dynamic-update-slice":
+        ub = _operand_bytes(comp, op, 1)
+        return ub if ub is not None else op.result_bytes
+    if op.kind == "fusion":
+        cm = _CALLS_RE.search(op.rhs)
+        callee = comps.get(cm.group(1)) if cm else None
+        if callee and callee.ops and callee.ops[-1].kind == "dynamic-update-slice":
+            root = callee.ops[-1]
+            ub = _operand_bytes(callee, root, 1)
+            if ub is not None:
+                return ub
+    return op.result_bytes
+
+
+def _group_size(rhs: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:
+        return max(int(m.group(2)), 2)
+    m = _GROUPS_LIST_RE.search(rhs)
+    if m:
+        return max(len(m.group(1).split(",")), 2)
+    return 2
+
+
+def _collective_cost(op: _Op, cost: HloCost):
+    kind = op.kind.replace("-start", "")
+    if kind not in _COLLECTIVES:
+        return
+    size = op.result_bytes
+    n = _group_size(op.rhs)
+    if kind == "all-gather":
+        size = size * (n - 1) / n
+    elif kind == "all-reduce":
+        size = 2 * size * (n - 1) / n
+    elif kind == "reduce-scatter":
+        size = size * (n - 1)
+    elif kind == "all-to-all":
+        size = size * (n - 1) / n
+    cost.coll_bytes[kind] += size
+    cost.coll_counts[kind] += 1
+
+
+def _trip_count(comps: Dict[str, _Comp], cond_name: str) -> int:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops:
+        for m in _CONST_RE.finditer(op.rhs):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _comp_cost(comps: Dict[str, _Comp], name: str, memo: Dict[str, HloCost]) -> HloCost:
+    if name in memo:
+        return memo[name]
+    memo[name] = HloCost()  # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    cost = HloCost()
+    for op in comp.ops:
+        if op.kind in ("dot", "convolution"):
+            cost.flops += _dot_flops(comp, op)
+            cost.mem_bytes += 2 * op.result_bytes
+        elif op.kind.replace("-start", "") in _COLLECTIVES:
+            _collective_cost(op, cost)
+            cost.mem_bytes += 2 * op.result_bytes
+        elif op.kind == "while":
+            body = _BODY_RE.search(op.rhs)
+            tm = _TRIP_RE.search(op.rhs)  # XLA annotates known trip counts
+            if tm:
+                trips = int(tm.group(1))
+            else:
+                cond = _COND_RE.search(op.rhs)
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+            if body:
+                cost.add(_comp_cost(comps, body.group(1), memo), mult=trips)
+        elif op.kind in ("fusion", "call", "custom-call", "async-start"):
+            cm = _CALLS_RE.search(op.rhs)
+            if cm:
+                # FLOPs inside fusions count; their internals don't hit HBM
+                cost.add(_comp_cost(comps, cm.group(1), memo), mem=False)
+            cost.mem_bytes += 2 * _effective_write_bytes(comps, comp, op)
+        elif op.kind == "conditional":
+            for cm in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*%([\w.\-]+)", op.rhs):
+                cost.add(_comp_cost(comps, cm.group(1), memo))
+            cost.mem_bytes += 2 * op.result_bytes
+        elif op.kind in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast"):
+            pass  # no HBM traffic of note
+        else:
+            cost.mem_bytes += 2 * _effective_write_bytes(comps, comp, op)
+    memo[name] = cost
+    return cost
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return HloCost()
+    memo: Dict[str, HloCost] = {}
+    return _comp_cost(comps, entry, memo)

@@ -1,0 +1,26 @@
+"""Production mesh builders (TPU v5e pods).
+
+Functions, not module-level constants — importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS for 512 host devices BEFORE
+importing jax (see dryrun.py); everything else sees the real device count.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256-chip pod) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_smoke_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-device CPU tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

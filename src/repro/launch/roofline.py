@@ -1,0 +1,158 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh) — all in seconds, per training/serving
+step, from the PER-DEVICE partitioned module:
+
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+``cost_analysis()`` provides FLOPs and bytes. Collective bytes are parsed
+from the optimized HLO text: for each collective op we take the RESULT
+shapes (local/per-device in SPMD modules) and apply ring-algorithm
+multipliers:
+
+  all-gather         bytes ~ result * (n-1)/n
+  all-reduce         bytes ~ 2 * size * (n-1)/n
+  reduce-scatter     bytes ~ result * (n-1)
+  all-to-all         bytes ~ result * (n-1)/n
+  collective-permute bytes ~ result
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "roofline_terms", "HW"]
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s
+    "link_bw": 50e9,  # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Sum of result-shape bytes: shapes appearing before the op keyword on
+    the lhs of `=`."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # result shapes are at the START of the rhs (possibly a tuple)
+    rhs = lhs[1]
+    op_pos = min((rhs.find(op) for op in _OPS if rhs.find(op) >= 0), default=-1)
+    if op_pos < 0:
+        return 0
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(rhs[:op_pos]):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-type per-device collective traffic in bytes."""
+    out = {op: 0.0 for op in _OPS}
+    counts = {op: 0 for op in _OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match op invocations, not fusions mentioning them
+        op_found = None
+        for op in _OPS:
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                op_found = op
+                break
+        if op_found is None:
+            continue
+        if stripped.startswith("ROOT"):
+            stripped = stripped[len("ROOT "):]
+        size = _result_bytes(stripped)
+        n = max(_group_size(stripped), 2)
+        if op_found == "all-gather":
+            size = size * (n - 1) / n
+        elif op_found == "all-reduce":
+            size = 2 * size * (n - 1) / n
+        elif op_found == "reduce-scatter":
+            size = size * (n - 1)
+        elif op_found == "all-to-all":
+            size = size * (n - 1) / n
+        out[op_found] += size
+        counts[op_found] += 1
+    out["_counts"] = counts
+    out["total"] = float(sum(v for k, v in out.items() if k in _OPS))
+    return out
+
+
+def roofline_terms_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware roofline terms via launch/hlo_analysis (the accurate path:
+    compiled.cost_analysis() counts while-loop bodies once)."""
+    from .hlo_analysis import analyze_hlo
+
+    c = analyze_hlo(hlo_text)
+    t_compute = c.flops / HW["peak_flops"]
+    t_memory = c.mem_bytes / HW["hbm_bw"]
+    t_coll = c.coll_total / HW["link_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "hlo_flops_per_device": c.flops,
+        "hlo_bytes_per_device": c.mem_bytes,
+        "collective_bytes_per_device": c.coll_total,
+        "collective_bytes_by_type": dict(c.coll_bytes),
+        "collective_counts": dict(c.coll_counts),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }
+
+
+def roofline_terms(cost: dict, coll: Dict[str, float]) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / HW["peak_flops"]
+    t_memory = byts / HW["hbm_bw"]
+    t_coll = coll["total"] / HW["link_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": byts,
+        "collective_bytes_per_device": coll["total"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }

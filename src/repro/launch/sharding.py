@@ -1,0 +1,215 @@
+"""Mesh context + sharding rules.
+
+Models are written against *logical* axes; this module resolves them to mesh
+axes at run time (or to no-ops when no mesh is active — smoke tests on CPU).
+
+Logical axes:
+  batch   -> ('pod', 'data') when the pod axis exists, else ('data',)
+  fsdp    -> 'data'   (weight shards all-gathered at use; ZeRO-3 style)
+  tensor  -> 'model'  (heads / ff / vocab / expert-hidden)
+  expert  -> EP placement axes (('model',) or ('data','model'))
+  seq     -> optional KV-cache sequence sharding for long-context decode
+
+``set_mesh(mesh, rules)`` installs the active mesh; ``shard(x, *logical)``
+applies a sharding constraint. ``param_pspecs(params)`` infers a
+PartitionSpec tree from weight names (see naming conventions in
+models/layers.py).
+"""
+
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "set_mesh",
+    "current_mesh",
+    "mesh_context",
+    "shard",
+    "logical_to_mesh",
+    "param_pspecs",
+    "axis_size",
+]
+
+_MESH = None
+_RULES = {}
+
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "expert": ("model",),
+    "seq": None,
+    # sequence-parallel residual activations: set to 'model' by the dry-run /
+    # trainer for train/prefill shapes (divides the (L,B,S,d) residual stack
+    # saved for backward by the tensor-parallel degree); None for decode.
+    "act_seq": None,
+}
+
+
+def set_mesh(mesh, rules: Optional[dict] = None):
+    global _MESH, _RULES
+    _MESH = mesh
+    _RULES = dict(DEFAULT_RULES)
+    if mesh is not None and "pod" in mesh.axis_names:
+        _RULES["batch"] = ("pod", "data")
+    if rules:
+        _RULES.update(rules)
+
+
+def current_mesh():
+    return _MESH
+
+
+def rules():
+    return dict(_RULES)
+
+
+@contextmanager
+def mesh_context(mesh, rules: Optional[dict] = None):
+    prev_mesh, prev_rules = _MESH, dict(_RULES)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        set_mesh(prev_mesh)
+        _RULES.clear()
+        _RULES.update(prev_rules)
+
+
+def axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes behind a logical axis (1 if no mesh)."""
+    if _MESH is None:
+        return 1
+    ax = _RULES.get(logical)
+    if ax is None:
+        return 1
+    ax = (ax,) if isinstance(ax, str) else ax
+    return int(np.prod([_MESH.shape[a] for a in ax]))
+
+
+def logical_to_mesh(*logical) -> P:
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+            continue
+        ax = _RULES.get(name, None)
+        if ax is None:
+            parts.append(None)
+        elif isinstance(ax, (tuple, list)):
+            parts.append(tuple(ax) if len(ax) > 1 else ax[0])
+        else:
+            parts.append(ax)
+    return P(*parts)
+
+
+def shard(x, *logical):
+    """with_sharding_constraint against the active mesh (no-op without)."""
+    if _MESH is None:
+        return x
+    spec = logical_to_mesh(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (matched on the leaf's path string).
+# Rules give the LOGICAL spec of the trailing dims; leading stacked-layer
+# axes are padded with None.
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES = [
+    # embeddings / unembedding
+    (r"(^|/)emb$", ("tensor", "fsdp")),  # (V, d)
+    (r"(^|/)lm_head$", ("fsdp", "tensor")),  # (d, V)
+    # attention
+    (r"(^|/)(wq|wk|wv)$", ("fsdp", "tensor", None)),  # (d, H, hd)
+    (r"(^|/)wo$", ("tensor", None, "fsdp")),  # (H, hd, d)
+    # MLA
+    (r"(^|/)(w_dq|w_dkv|w_kr)$", ("fsdp", None)),
+    (r"(^|/)(w_uq|w_uk|w_uv)$", (None, "tensor", None)),  # (rank, H, hd)
+    (r"(^|/)w_o_mla$", ("tensor", None, "fsdp")),
+    # MoE — expert dim over EP axes; d/fe unsharded (the 'tensor' axis is a
+    # subset of the EP axes in our configs, so using it twice would conflict)
+    (r"experts/(w_gate|w_in)$", ("expert", None, None)),  # (E, d, fe)
+    (r"experts/w_out$", ("expert", None, None)),  # (E, fe, d)
+    (r"(^|/)router$", ("fsdp", None)),  # (d, E)
+    # dense MLP
+    (r"(^|/)(w_gate|w_in)$", ("fsdp", "tensor")),
+    (r"(^|/)w_out$", ("tensor", "fsdp")),
+    # mamba / xlstm projections
+    (r"(^|/)in_proj$", ("fsdp", "tensor")),
+    (r"(^|/)out_proj$", ("tensor", "fsdp")),
+    (r"(^|/)conv_w$", (None, "tensor")),  # (K, conv_dim)
+    (r"(^|/)(A_log|dt_bias|D)$", ("tensor",)),  # (H,)
+    # mLSTM head-wise block-diagonal projections
+    (r"(^|/)(wq_m|wk_m)$", (None, None, None)),  # (H, DV, DK) small
+    (r"(^|/)wv_m$", (None, None, "tensor")),  # (H, DV, DV)
+    (r"(^|/)(wi_gate|wf_gate|wo_gate_m)$", ("fsdp", None)),
+    # sLSTM
+    (r"(^|/)(rz|ri|rf|ro)$", (None, None, None)),  # (H, D, D) small
+    (r"(^|/)w_zifo$", ("fsdp", None, None)),  # (d, 4, H*D)
+    # frontends / misc projections
+    (r"(^|/)(frame_proj|patch_proj)$", ("fsdp", "tensor")),
+    (r"(^|/)mask_emb$", (None,)),
+    # norms / biases / scalars: replicated
+    (r".*", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axes_size(entry) -> int:
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else entry
+    return int(np.prod([_MESH.shape[a] for a in axes])) if _MESH else 1
+
+
+def infer_pspec(path: str, shape) -> P:
+    ndim = len(shape)
+    for pattern, logical in _PARAM_RULES:
+        if re.search(pattern, path):
+            if logical is None:
+                return P()
+            spec = list(logical_to_mesh(*logical))
+            # pad leading stacked-layer axes
+            while len(spec) < ndim:
+                spec.insert(0, None)
+            if len(spec) > ndim:  # rule longer than leaf (e.g. scalar) -> replicate
+                return P()
+            # drop axes that don't divide the dim (e.g. MQA kv=1 heads)
+            for i, entry in enumerate(spec):
+                if entry is not None and shape[i] % _axes_size(entry) != 0:
+                    spec[i] = None
+            return P(*spec)
+    return P()
+
+
+def param_pspecs(params):
+    """PartitionSpec pytree matching ``params`` (requires active mesh)."""
+
+    def leaf_spec(path, leaf):
+        return infer_pspec(_path_str(path), tuple(np.shape(leaf)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params):
+    mesh = current_mesh()
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_pspecs(params))

@@ -1,0 +1,177 @@
+"""Step builders (train / prefill / serve) + sharding spec assembly.
+
+These are the SPMD programs the dry-run lowers and the drivers execute:
+  train_step  : loss -> grads -> optimizer update (params/opt state 2-D sharded)
+  prefill_step: forward over the full sequence
+  serve_step  : ONE new token against a seq_len KV cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import decode_fn, init_params, input_specs, loss_fn, prefill_fn
+from ..optim.optimizers import AdafactorState, AdamState, get_optimizer
+from . import sharding as shd
+
+__all__ = [
+    "build_train_step",
+    "build_prefill_step",
+    "build_serve_step",
+    "abstract_params",
+    "abstract_opt_state",
+    "train_shardings",
+    "batch_pspecs",
+    "cache_pspecs",
+]
+
+
+def build_train_step(cfg: ModelConfig):
+    opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(functools.partial(loss_fn, cfg=cfg))(
+            params, batch=batch
+        )
+        updates, opt_state = opt.update(grads, opt_state, params)
+        from ..optim.optimizers import apply_updates
+
+        return apply_updates(params, updates), opt_state, loss
+
+    return train_step, opt
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill_fn(params, cfg, batch)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_fn(params, cfg, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract values (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ModelConfig, params_struct):
+    opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+    return jax.eval_shape(opt.init, params_struct)
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+
+def _ns(spec: P):
+    return NamedSharding(shd.current_mesh(), spec)
+
+
+def opt_state_pspecs(cfg: ModelConfig, pspecs):
+    name = cfg.optimizer
+    if name == "sgd":
+        return ()
+    if name == "momentum":
+        return pspecs
+    if name == "adamw":
+        return AdamState(step=P(), mu=pspecs, nu=pspecs)
+    if name == "adafactor":
+        vr = jax.tree.map(lambda s: P(*s[:-1]) if len(s) >= 2 else s, pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+        vc = jax.tree.map(lambda s: P(*s[:-2], s[-1]) if len(s) >= 2 else P(), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+        return AdafactorState(step=P(), vr=vr, vc=vc)
+    raise ValueError(name)
+
+
+def _batch_axes_for(B: int):
+    """Logical batch axes that actually divide B (else unsharded)."""
+    mesh = shd.current_mesh()
+    rule = shd.rules()["batch"]
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if B % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    # try data only
+    if B % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def batch_pspecs(cfg: ModelConfig, batch_struct, B: int):
+    ba = _batch_axes_for(B)
+
+    def spec(leaf):
+        return P(ba, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, batch_struct)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_struct, B: int, S: int):
+    """Heuristic per-leaf cache sharding (see DESIGN.md §5):
+      batch dim -> batch axes (if divisible); else
+      seq dim   -> 'data' (long-context: shard the KV cache sequence);
+      largest remaining dim divisible by the tensor size -> 'model'.
+    """
+    mesh = shd.current_mesh()
+    ba = _batch_axes_for(B)
+    tensor_size = mesh.shape["model"]
+    data_size = mesh.shape["data"]
+
+    def spec(leaf):
+        dims = list(leaf.shape)
+        out = [None] * len(dims)
+        batch_done = False
+        if ba is not None:
+            for i, dsz in enumerate(dims):
+                if dsz == B:
+                    out[i] = ba
+                    batch_done = True
+                    break
+        data_taken = batch_done and (
+            ba == "data" or (isinstance(ba, tuple) and "data" in ba)
+        )
+        if not data_taken:
+            for i, dsz in enumerate(dims):
+                if out[i] is None and dsz == S and S % data_size == 0:
+                    out[i] = "data"
+                    break
+        # largest remaining dim divisible by the tensor size -> 'model'
+        cands = [
+            (dsz, i) for i, dsz in enumerate(dims)
+            if out[i] is None and dsz % tensor_size == 0 and dsz >= tensor_size and dsz != S
+        ]
+        if cands:
+            _, i = max(cands)
+            out[i] = "model"
+        return P(*out)
+
+    return jax.tree.map(spec, cache_struct)
+
+
+def train_shardings(cfg: ModelConfig, params_struct, opt_struct, batch_struct, B: int):
+    pspecs = shd.param_pspecs(params_struct)
+    ospecs = opt_state_pspecs(cfg, pspecs)
+    bspecs = batch_pspecs(cfg, batch_struct, B)
+    to_ns = lambda tree: jax.tree.map(_ns, tree, is_leaf=lambda x: isinstance(x, P))
+    return to_ns(pspecs), to_ns(ospecs), to_ns(bspecs)

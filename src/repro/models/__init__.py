@@ -1,0 +1,22 @@
+"""Model zoo: 10 assigned architectures (dense / moe / ssm / hybrid /
+encoder / vlm families), pure JAX with scan-over-layers."""
+
+from .model import (
+    active_param_count,
+    decode_fn,
+    init_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    make_dummy_batch,
+    model_flops_per_token,
+    param_count,
+    prefill_fn,
+    supports_mode,
+)
+
+__all__ = [
+    "init_params", "loss_fn", "prefill_fn", "init_cache", "decode_fn",
+    "input_specs", "make_dummy_batch", "param_count", "active_param_count",
+    "model_flops_per_token", "supports_mode",
+]

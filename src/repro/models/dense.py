@@ -1,0 +1,341 @@
+"""Dense decoder LMs (llama-family): deepseek-7b, granite-20b (MQA),
+minitron-8b (squared-ReLU), gemma2-2b (local/global alternation, softcaps,
+post-norms), and the text backbone reused by paligemma.
+
+Scan-over-layers with a static per-period block *pattern* (period 1 for
+uniform stacks, 2 for gemma2's sliding/global alternation) keeps the HLO one
+layer deep regardless of depth.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.sharding import shard
+from .layers import (
+    apply_rope,
+    attention,
+    dense_init,
+    make_rope,
+    mlp_act,
+    mlp_gated,
+    rms_norm,
+    softcap,
+    squared_relu,
+)
+
+__all__ = [
+    "init_dense",
+    "dense_forward",
+    "dense_decode_step",
+    "dense_loss",
+    "init_dense_cache",
+    "attn_pattern",
+    "init_layer_stack",
+    "layer_apply",
+    "stack_forward",
+    "stack_decode",
+]
+
+
+def attn_pattern(cfg: ModelConfig):
+    if cfg.attn_kind == "local_global":
+        if cfg.long_context:  # 500k serving mode: all layers sliding-window
+            return ("sliding", "sliding")
+        return ("sliding", "causal")
+    if cfg.attn_kind == "bidirectional":
+        return ("bidirectional",)
+    if cfg.attn_kind == "prefix":
+        return ("prefix",)
+    return ("causal",)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key):
+    d, H, Hkv, hd, f = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    pd = cfg.pdtype()
+    p = {
+        "ln1": jnp.zeros((d,), pd),
+        "ln2": jnp.zeros((d,), pd),
+        "attn": {
+            "wq": dense_init(ks[0], (d, H, hd), fan_in=d, dtype=pd),
+            "wk": dense_init(ks[1], (d, Hkv, hd), fan_in=d, dtype=pd),
+            "wv": dense_init(ks[2], (d, Hkv, hd), fan_in=d, dtype=pd),
+            "wo": dense_init(ks[3], (H, hd, d), fan_in=H * hd, dtype=pd),
+        },
+    }
+    if cfg.mlp_kind in ("gated_silu", "gated_gelu"):
+        p["mlp"] = {
+            "w_gate": dense_init(ks[4], (d, f), dtype=pd),
+            "w_in": dense_init(ks[5], (d, f), dtype=pd),
+            "w_out": dense_init(ks[6], (f, d), fan_in=f, dtype=pd),
+        }
+    else:  # plain activation MLP (squared_relu / gelu)
+        p["mlp"] = {
+            "w_in": dense_init(ks[5], (d, f), dtype=pd),
+            "w_out": dense_init(ks[6], (f, d), fan_in=f, dtype=pd),
+        }
+    if cfg.attn_kind == "local_global":  # gemma2 post-norms
+        p["ln1b"] = jnp.zeros((d,), pd)
+        p["ln2b"] = jnp.zeros((d,), pd)
+    return p
+
+
+def init_layer_stack(cfg: ModelConfig, key, init_one=None):
+    """Stacks per-layer params: (n_groups, period, ...) leading axes."""
+    init_one = init_one or _init_layer
+    pattern = attn_pattern(cfg)
+    period = len(pattern)
+    n_groups = cfg.num_layers // period
+    keys = jax.random.split(key, cfg.num_layers).reshape(n_groups, period, -1)
+
+    def init_group(gkeys):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[init_one(cfg, k) for k in gkeys])
+
+    stacks = [init_group(keys[g]) for g in range(n_groups)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *stacks)
+
+
+def init_dense(cfg: ModelConfig, key):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    pd = cfg.pdtype()
+    params = {
+        "emb": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), fan_in=cfg.d_model, dtype=pd),
+        "layers": init_layer_stack(cfg, k_layers),
+        "ln_f": jnp.zeros((cfg.d_model,), pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=pd)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer body (shared by forward and decode)
+# ---------------------------------------------------------------------------
+
+
+def _mlp(cfg: ModelConfig, p, x):
+    x = shard(x, "batch", None, None)
+    if cfg.mlp_kind == "gated_silu":
+        out = mlp_gated(p, x, jax.nn.silu)
+    elif cfg.mlp_kind == "gated_gelu":
+        out = mlp_gated(p, x, jax.nn.gelu)
+    elif cfg.mlp_kind == "squared_relu":
+        out = mlp_act(p, x, squared_relu)
+    else:
+        out = mlp_act(p, x, jax.nn.gelu)
+    return out
+
+
+def layer_apply(
+    cfg: ModelConfig,
+    p,
+    h,
+    kind: str,
+    rope_sincos,
+    *,
+    q_pos,
+    kv_pos,
+    cache_kv=None,  # (k_cache, v_cache) (B, S_max, Hkv, hd) or None
+    write_pos=None,  # decode: scalar position to write new kv
+    prefix_len=None,
+):
+    """One transformer block. Returns (h, new_kv) where new_kv is either the
+    fresh (k, v) of this call (train/prefill) or the updated caches (decode).
+    """
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    sin, cos = rope_sincos
+    from ..launch import sharding as shd
+
+    kv_heads_spec = "tensor" if Hkv % max(shd.axis_size("tensor"), 1) == 0 else None
+    a_in = rms_norm(h, p["ln1"])
+    q = jnp.einsum("bsd,dhk->bshk", a_in, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", a_in, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", a_in, p["attn"]["wv"])
+    q = shard(apply_rope(q, sin, cos), "batch", None, "tensor", None)
+    k = shard(apply_rope(k, sin, cos), "batch", None, kv_heads_spec, None)
+    v = shard(v, "batch", None, kv_heads_spec, None)
+
+    if cache_kv is not None and write_pos is not None:
+        k_cache, v_cache = cache_kv
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), write_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), write_pos, axis=1)
+        k_use, v_use = k_cache, v_cache
+        kv_pos_use = kv_pos
+        new_kv = (k_cache, v_cache)
+        S_max = k_cache.shape[1]
+        if kind == "sliding" and q.shape[1] == 1 and S_max > 2 * cfg.window:
+            # long-context decode: a sliding-window layer only ever attends
+            # to the last `window` cache slots — slice them out instead of
+            # scoring the whole 500k cache (the 0.02 MODEL/HLO-FLOPs waste
+            # flagged in §Roofline)
+            start = jnp.clip(write_pos - cfg.window + 1, 0, S_max - cfg.window)
+            k_use = jax.lax.dynamic_slice_in_dim(k_cache, start, cfg.window, axis=1)
+            v_use = jax.lax.dynamic_slice_in_dim(v_cache, start, cfg.window, axis=1)
+            kv_pos_use = start + jnp.arange(cfg.window)
+    else:
+        k_use, v_use = k, v
+        kv_pos_use = kv_pos
+        new_kv = (k, v)
+
+    out = attention(
+        q, k_use, v_use,
+        q_pos=q_pos, kv_pos=kv_pos_use, kind=kind, window=cfg.window,
+        prefix_len=prefix_len, attn_softcap=cfg.attn_softcap,
+        block_q=cfg.attn_block_q, impl=cfg.attn_impl,
+    )
+    # hand off from head-parallel to sequence-parallel BEFORE the output
+    # projection: otherwise the d_wo backward einsum sees conflicting
+    # shardings (heads vs seq on 'model') and GSPMD all-gathers the full
+    # f32 activation cotangent (30 GB/layer on deepseek-v3 — §Perf)
+    out = shard(out, "batch", "act_seq", None, None)
+    attn_out = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+    if "ln1b" in p:
+        attn_out = rms_norm(attn_out, p["ln1b"])
+    h = h + attn_out
+
+    m_in = rms_norm(h, p["ln2"])
+    mlp_out = _mlp(cfg, p["mlp"], m_in)
+    if "ln2b" in p:
+        mlp_out = rms_norm(mlp_out, p["ln2b"])
+    h = h + mlp_out
+    return shard(h, "batch", "act_seq", None), new_kv
+
+
+# ---------------------------------------------------------------------------
+# full stack: forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def stack_forward(cfg: ModelConfig, layers, h, *, prefix_len=None, collect_cache=False,
+                  layer_fn=layer_apply):
+    """Scan over the layer stack. Returns (h, caches or None)."""
+    S = h.shape[1]
+    pattern = attn_pattern(cfg)
+    pos = jnp.arange(S)
+    rope = make_rope(pos, cfg.hd, cfg.rope_base)
+
+    def group_body(h, gp):
+        kvs = []
+        for sub, kind in enumerate(pattern):
+            p_sub = jax.tree.map(lambda x: x[sub], gp)
+            h, kv = layer_fn(
+                cfg, p_sub, h, kind, rope, q_pos=pos, kv_pos=pos, prefix_len=prefix_len
+            )
+            kvs.append(kv)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs) if collect_cache else None
+        return h, stacked
+
+    body = _maybe_remat(cfg, group_body)
+    h, caches = jax.lax.scan(body, h, layers)
+    return h, caches
+
+
+def stack_decode(cfg: ModelConfig, layers, h, cache, pos_scalar, *, layer_fn=layer_apply):
+    """One-token decode through the stack; cache leading dims (n_groups, period)."""
+    pattern = attn_pattern(cfg)
+    S_max = jax.tree.leaves(cache)[0].shape[3]  # (n_groups, period, B, S, ...)
+    q_pos = pos_scalar[None]
+    kv_pos = jnp.arange(S_max)
+    rope = make_rope(q_pos, cfg.hd, cfg.rope_base)
+
+    def group_body(h, inp):
+        gp, gcache = inp
+        new_caches = []
+        for sub, kind in enumerate(pattern):
+            p_sub = jax.tree.map(lambda x: x[sub], gp)
+            c_sub = jax.tree.map(lambda x: x[sub], gcache)
+            h, new_kv = layer_fn(
+                cfg, p_sub, h, kind, rope, q_pos=q_pos, kv_pos=kv_pos,
+                cache_kv=c_sub, write_pos=pos_scalar,
+            )
+            new_caches.append(new_kv)
+        return h, jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+
+    h, new_cache = jax.lax.scan(group_body, h, (layers, cache))
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# public model API
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params, tokens):
+    h = params["emb"][tokens].astype(cfg.cdtype())
+    if cfg.scale_embedding:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return shard(h, "batch", "act_seq", None)
+
+
+def _logits(cfg: ModelConfig, params, h):
+    h = rms_norm(h, params["ln_f"])
+    head = params["emb"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return shard(logits.astype(jnp.float32), "batch", None, "tensor")
+
+
+def dense_forward(params, cfg: ModelConfig, tokens, *, prefix_len=None, collect_cache=False):
+    h = _embed(cfg, params, tokens)
+    h, caches = stack_forward(cfg, params["layers"], h, prefix_len=prefix_len, collect_cache=collect_cache)
+    return _logits(cfg, params, h), caches
+
+
+def init_dense_cache(cfg: ModelConfig, batch: int, max_len: int):
+    pattern = attn_pattern(cfg)
+    n_groups = cfg.num_layers // len(pattern)
+    shape = (n_groups, len(pattern), batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return (jnp.zeros(shape, cfg.cdtype()), jnp.zeros(shape, cfg.cdtype()))
+
+
+def dense_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens (B, 1); pos scalar int32. Returns (logits (B, 1, V), cache)."""
+    h = _embed(cfg, params, tokens)
+    h, new_cache = stack_decode(cfg, params["layers"], h, cache, pos)
+    return _logits(cfg, params, h), new_cache
+
+
+def cross_entropy(logits, targets, valid=None):
+    """One-hot-einsum formulation: a gather over the vocab-sharded logits
+    would force GSPMD to all-gather the full (B, S, V) f32 tensor; the
+    one-hot product keeps the vocab dim sharded through the reduction."""
+    x = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(x.max(axis=-1, keepdims=True))
+    shifted = x - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))  # (B, S)
+    onehot = jax.nn.one_hot(targets, x.shape[-1], dtype=jnp.float32)
+    at_target = jnp.einsum("bsv,bsv->bs", shifted, onehot)
+    nll = lse - at_target
+    if valid is None:
+        return nll.mean()
+    w = valid.astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def dense_loss(params, cfg: ModelConfig, batch):
+    """batch: dict with 'tokens' (B, S+1)."""
+    tokens = batch["tokens"]
+    logits, _ = dense_forward(params, cfg, tokens[:, :-1])
+    return cross_entropy(logits, tokens[:, 1:])

@@ -1,0 +1,49 @@
+"""HuBERT-style encoder-only audio model (arXiv:2106.07447).
+
+The conv waveform frontend is STUBBED per the task spec: inputs are
+precomputed frame embeddings ``(B, S, frame_dim)``. The transformer backbone
+(48L/1280d for hubert-xlarge) is bidirectional; training is masked
+prediction of cluster ids (vocab 504) at masked frames.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.sharding import shard
+from .dense import cross_entropy, init_layer_stack, stack_forward
+from .layers import dense_init, rms_norm
+
+__all__ = ["init_hubert", "hubert_forward", "hubert_loss"]
+
+
+def init_hubert(cfg: ModelConfig, key):
+    k_proj, k_layers, k_head, k_mask = jax.random.split(key, 4)
+    pd = cfg.pdtype()
+    return {
+        "frame_proj": dense_init(k_proj, (cfg.frame_dim, cfg.d_model), dtype=pd),
+        "mask_emb": dense_init(k_mask, (cfg.d_model,), fan_in=cfg.d_model, dtype=pd),
+        "layers": init_layer_stack(cfg, k_layers),
+        "ln_f": jnp.zeros((cfg.d_model,), pd),
+        "head": dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=pd),
+    }
+
+
+def hubert_forward(params, cfg: ModelConfig, frames, mask=None):
+    """frames (B, S, frame_dim); mask (B, S) bool (True = masked)."""
+    h = jnp.einsum("bsf,fd->bsd", frames.astype(cfg.cdtype()), params["frame_proj"])
+    if mask is not None:
+        h = jnp.where(mask[..., None], params["mask_emb"].astype(h.dtype), h)
+    h = shard(h, "batch", "act_seq", None)
+    h, _ = stack_forward(cfg, params["layers"], h)
+    h = rms_norm(h, params["ln_f"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    return shard(logits.astype(jnp.float32), "batch", None, "tensor")
+
+
+def hubert_loss(params, cfg: ModelConfig, batch):
+    """batch: {frames (B,S,F), mask (B,S) bool, labels (B,S) int}."""
+    logits = hubert_forward(params, cfg, batch["frames"], batch["mask"])
+    return cross_entropy(logits, batch["labels"], valid=batch["mask"])

@@ -1,0 +1,217 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block applied
+every ``cfg.shared_attn_every`` layers (arXiv:2411.15242).
+
+The shared block's weights are reused at every application (Zamba2's memory
+trick); its input is ``concat(hidden, original_embeddings)`` projected back
+to ``d_model``. Each application keeps its OWN KV cache at decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.sharding import shard
+from .dense import _embed, _init_layer, _logits, _maybe_remat, cross_entropy, layer_apply
+from .layers import dense_init, make_rope, rms_norm
+from .ssm import causal_conv1d, causal_conv1d_step, ssd_chunked, ssd_step
+
+__all__ = [
+    "init_zamba",
+    "zamba_forward",
+    "zamba_loss",
+    "init_zamba_cache",
+    "zamba_decode_step",
+]
+
+
+def _dims(cfg: ModelConfig):
+    inner = cfg.ssm_expand * cfg.d_model
+    H = inner // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = inner + 2 * N  # x, B, C are convolved
+    d_in_proj = 2 * inner + 2 * N + H  # z, x, B, C, dt
+    return inner, H, P, N, conv_dim, d_in_proj
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_mamba_block(cfg: ModelConfig, key):
+    d = cfg.d_model
+    inner, H, P, N, conv_dim, d_in_proj = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    pd = cfg.pdtype()
+    return {
+        "ln": jnp.zeros((d,), pd),
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype=pd),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), fan_in=cfg.ssm_conv, dtype=pd),
+        "A_log": jnp.zeros((H,), pd),  # A = -exp(A_log) = -1 at init
+        "dt_bias": jnp.full((H,), -1.0, pd),  # softplus(-1+x) ~ 0.3
+        "D": jnp.ones((H,), pd),
+        "gn": jnp.zeros((inner,), pd),
+        "out_proj": dense_init(ks[2], (inner, d), fan_in=inner, dtype=pd),
+    }
+
+
+def init_zamba(cfg: ModelConfig, key):
+    k_emb, k_mamba, k_shared, k_proj, k_head = jax.random.split(key, 5)
+    pd = cfg.pdtype()
+    period = cfg.shared_attn_every
+    n_groups = cfg.num_layers // period
+    keys = jax.random.split(k_mamba, cfg.num_layers).reshape(n_groups, period, -1)
+
+    def init_group(gkeys):
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[_init_mamba_block(cfg, k) for k in gkeys]
+        )
+
+    groups = [init_group(keys[g]) for g in range(n_groups)]
+    return {
+        "emb": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), fan_in=cfg.d_model, dtype=pd),
+        "mamba_groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        # single SHARED transformer block + 2d->d input projector
+        "shared": _init_layer(cfg, k_shared),
+        "shared_in_proj": dense_init(k_proj, (2 * cfg.d_model, cfg.d_model), dtype=pd),
+        "ln_f": jnp.zeros((cfg.d_model,), pd),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=pd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block body
+# ---------------------------------------------------------------------------
+
+
+def _mamba_block(cfg, p, h, state=None, step=False):
+    """state: (conv_state (B,K-1,conv_dim), ssd_state (B,H,P,N))."""
+    inner, H, P, N, conv_dim, _ = _dims(cfg)
+    x = rms_norm(h, p["ln"])
+    B, S = x.shape[0], x.shape[1]
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = proj[..., :inner]
+    xbc = proj[..., inner : inner + conv_dim]
+    dt_pre = proj[..., inner + conv_dim :]  # (B,S,H)
+    xbc = shard(xbc, "batch", None, "tensor")
+    conv_state = state[0] if state is not None else None
+    if step:
+        xbc, conv_state = causal_conv1d_step(xbc, p["conv_w"], conv_state)
+    else:
+        xbc, conv_state = causal_conv1d(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :inner].reshape(B, S, H, P)
+    Bm = xbc[..., inner : inner + N]
+    Cm = xbc[..., inner + N :]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    ssd_state = state[1] if state is not None else None
+    if step:
+        y, ssd_state = ssd_step(xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], ssd_state)
+        y = y[:, None]
+    else:
+        y, ssd_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=min(cfg.chunk_size, S), state=ssd_state)
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gn"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return h + out, (conv_state, ssd_state)
+
+
+def _shared_block(cfg, params, h, emb0, rope, q_pos, kv_pos, cache_kv=None, write_pos=None):
+    u = jnp.concatenate([h, emb0], axis=-1)
+    u = jnp.einsum("bse,ed->bsd", u, params["shared_in_proj"])
+    u, new_kv = layer_apply(
+        cfg, params["shared"], u, "causal", rope, q_pos=q_pos, kv_pos=kv_pos,
+        cache_kv=cache_kv, write_pos=write_pos,
+    )
+    return h + u, new_kv
+
+
+# ---------------------------------------------------------------------------
+# forward / decode
+# ---------------------------------------------------------------------------
+
+
+def init_zamba_cache(cfg: ModelConfig, batch: int, max_len: int):
+    inner, H, P, N, conv_dim, _ = _dims(cfg)
+    period = cfg.shared_attn_every
+    n_groups = cfg.num_layers // period
+    f32 = jnp.float32
+    mamba = (
+        jnp.zeros((n_groups, period, batch, cfg.ssm_conv - 1, conv_dim), cfg.cdtype()),
+        jnp.zeros((n_groups, period, batch, H, P, N), f32),
+    )
+    kv_shape = (n_groups, batch, max_len, cfg.num_kv_heads, cfg.hd)
+    attn = (jnp.zeros(kv_shape, cfg.cdtype()), jnp.zeros(kv_shape, cfg.cdtype()))
+    return {"mamba": mamba, "attn": attn}
+
+
+def zamba_forward(params, cfg: ModelConfig, tokens, *, state=None, collect_state=False):
+    h = _embed(cfg, params, tokens)
+    emb0 = h
+    S = h.shape[1]
+    pos = jnp.arange(S)
+    rope = make_rope(pos, cfg.hd, cfg.rope_base)
+    if state is None:
+        state = init_zamba_cache(cfg, tokens.shape[0], S if collect_state else 1)
+
+    def group_body(hh, inp):
+        gp, gstate = inp
+
+        def m_body(hh2, inp2):
+            lp, ls = inp2
+            hh2, ns = _mamba_block(cfg, lp, hh2, ls, step=False)
+            return hh2, ns
+
+        hh, new_mamba = jax.lax.scan(m_body, hh, (gp, gstate["mamba"]))
+        if collect_state:
+            hh, new_kv = _shared_block(cfg, params, hh, emb0, rope, pos, pos,
+                                       cache_kv=gstate["attn"], write_pos=0)
+        else:
+            hh, new_kv = _shared_block(cfg, params, hh, emb0, rope, pos, pos)
+        out = {"mamba": new_mamba, "attn": new_kv} if collect_state else None
+        return shard(hh, "batch", "act_seq", None), out
+
+    # regroup state to scan over groups: mamba leaves (G, period, ...) ok;
+    # attn leaves (G, B, S, ...) ok.
+    xs_state = {"mamba": state["mamba"], "attn": state["attn"]}
+    h, new_state = jax.lax.scan(_maybe_remat(cfg, group_body), h, (params["mamba_groups"], xs_state))
+    return _logits(cfg, params, h), new_state
+
+
+def zamba_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    logits, _ = zamba_forward(params, cfg, tokens[:, :-1])
+    return cross_entropy(logits, tokens[:, 1:])
+
+
+def zamba_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    h = _embed(cfg, params, tokens)
+    emb0 = h
+    S_max = jax.tree.leaves(cache["attn"])[0].shape[2]
+    q_pos = pos[None]
+    kv_pos = jnp.arange(S_max)
+    rope = make_rope(q_pos, cfg.hd, cfg.rope_base)
+
+    def group_body(hh, inp):
+        gp, gstate = inp
+
+        def m_body(hh2, inp2):
+            lp, ls = inp2
+            hh2, ns = _mamba_block(cfg, lp, hh2, ls, step=True)
+            return hh2, ns
+
+        hh, new_mamba = jax.lax.scan(m_body, hh, (gp, gstate["mamba"]))
+        hh, new_kv = _shared_block(
+            cfg, params, hh, emb0, rope, q_pos, kv_pos,
+            cache_kv=gstate["attn"], write_pos=pos,
+        )
+        return hh, {"mamba": new_mamba, "attn": new_kv}
+
+    h, new_state = jax.lax.scan(group_body, h, (params["mamba_groups"], cache))
+    return _logits(cfg, params, h), new_state

@@ -1,0 +1,120 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Train/prefill uses the *non-absorbed* form (materialize per-head K/V from the
+compressed latent) — best for MXU utilization on full sequences. Decode uses
+the *absorbed* form: queries are projected into the latent space and attend
+directly against the cached ``c_kv`` — the KV cache is ``(B, S, d_c + d_r)``
+instead of ``(B, S, H, (d_nope + d_r + d_v))``, the whole point of MLA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.sharding import shard
+from .layers import apply_rope, dense_init, make_rope, rms_norm
+
+__all__ = ["init_mla", "mla_forward", "mla_decode_step", "init_mla_cache"]
+
+
+def init_mla(cfg: ModelConfig, key):
+    d = cfg.d_model
+    H = cfg.num_heads
+    nd = cfg.hd  # nope head dim
+    rd = cfg.rope_head_dim
+    vd = cfg.v_head_dim or nd
+    qr = cfg.q_lora_rank
+    kr = cfg.kv_lora_rank
+    ks = jax.random.split(key, 10)
+    pd = cfg.pdtype()
+    p = {
+        "w_dq": dense_init(ks[0], (d, qr), dtype=pd),
+        "q_ln": jnp.zeros((qr,), pd),
+        "w_uq": dense_init(ks[1], (qr, H, nd + rd), fan_in=qr, dtype=pd),
+        "w_dkv": dense_init(ks[2], (d, kr), dtype=pd),
+        "kv_ln": jnp.zeros((kr,), pd),
+        "w_uk": dense_init(ks[3], (kr, H, nd), fan_in=kr, dtype=pd),
+        "w_uv": dense_init(ks[4], (kr, H, vd), fan_in=kr, dtype=pd),
+        "w_kr": dense_init(ks[5], (d, rd), dtype=pd),
+        "wo": dense_init(ks[6], (H, vd, d), fan_in=H * vd, dtype=pd),
+    }
+    return p
+
+
+def _latents(cfg, p, x):
+    """Shared path: compressed latents + rope key."""
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_ln"])
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_ln"])
+    kr = jnp.einsum("bsd,dr->bsr", x, p["w_kr"])  # (B, S, rd) shared across heads
+    return cq, ckv, kr
+
+
+def mla_forward(cfg: ModelConfig, p, x, *, q_pos, collect_cache=False):
+    """Non-absorbed attention over the full sequence (train / prefill)."""
+    nd, rd = cfg.hd, cfg.rope_head_dim
+    vd = cfg.v_head_dim or nd
+    H = cfg.num_heads
+    cq, ckv, kr = _latents(cfg, p, x)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])  # (B,S,H,nd+rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    sin, cos = make_rope(q_pos, rd, cfg.rope_base)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(kr[:, :, None, :], sin, cos)  # (B,S,1,rd)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+    q_full = shard(jnp.concatenate([q_nope, q_rope], -1), "batch", None, "tensor", None)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (rd,))], -1)
+    k_full = shard(k_full, "batch", None, "tensor", None)
+    from .layers import attention  # local import to avoid cycle at module load
+
+    out = attention(
+        q_full, k_full, v, q_pos=q_pos, kv_pos=q_pos, kind="causal",
+        scale=(nd + rd) ** -0.5, block_q=cfg.attn_block_q, impl=cfg.attn_impl,
+    )
+    # head-parallel -> sequence-parallel handoff (see dense.layer_apply)
+    out = shard(out, "batch", "act_seq", None, None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    cache = (ckv, kr) if collect_cache else None
+    return y, cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers_stacked):
+    kr_dim = cfg.rope_head_dim
+    shape_c = n_layers_stacked + (batch, max_len, cfg.kv_lora_rank)
+    shape_r = n_layers_stacked + (batch, max_len, kr_dim)
+    return (jnp.zeros(shape_c, cfg.cdtype()), jnp.zeros(shape_r, cfg.cdtype()))
+
+
+def mla_decode_step(cfg: ModelConfig, p, x, cache, pos):
+    """Absorbed decode. x (B, 1, d); cache (ckv (B,S,kr), kro (B,S,rd));
+    pos scalar. Returns (y (B,1,d), new_cache)."""
+    nd, rd = cfg.hd, cfg.rope_head_dim
+    vd = cfg.v_head_dim or nd
+    ckv_cache, kr_cache = cache
+    S = ckv_cache.shape[1]
+    cq, ckv_t, kr_t = _latents(cfg, p, x)  # (B,1,*)
+    sin, cos = make_rope(pos[None], rd, cfg.rope_base)
+    kr_t = apply_rope(kr_t[:, :, None, :], sin, cos)[:, :, 0, :]  # (B,1,rd)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(ckv_cache, ckv_t.astype(ckv_cache.dtype), pos, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(kr_cache, kr_t.astype(kr_cache.dtype), pos, axis=1)
+
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])  # (B,1,H,nd+rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, sin, cos)
+    # absorb W_uk into the query: q_c (B,1,H,kr)
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = (nd + rd) ** -0.5
+    logits = (
+        jnp.einsum("bshr,btr->bhst", q_c.astype(jnp.float32), ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    ) * scale  # (B, H, 1, S)
+    kv_pos = jnp.arange(S)
+    mask = kv_pos[None, None, None, :] <= pos
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out_c = jnp.einsum("bhst,btr->bshr", w, ckv_cache.astype(jnp.float32))  # (B,1,H,kr)
+    out = jnp.einsum("bshr,rhk->bshk", out_c.astype(x.dtype), p["w_uv"])  # (B,1,H,vd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, (ckv_cache, kr_cache)

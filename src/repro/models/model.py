@@ -1,0 +1,243 @@
+"""Unified model API: family dispatch, input specs, parameter/FLOPs accounting.
+
+Every architecture exposes:
+  init_params(cfg, key)                -> params pytree
+  loss_fn(params, cfg, batch)          -> scalar (train objective)
+  prefill_fn(params, cfg, batch)       -> logits (forward over full sequence)
+  init_cache(cfg, batch, max_len)      -> decode cache (None for encoders)
+  decode_fn(params, cfg, cache, batch) -> (logits, new_cache)
+  input_specs(cfg, shape)              -> ShapeDtypeStruct pytree per mode
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import InputShape, ModelConfig
+from . import dense, encoder, hybrid, moe, vlm, xlstm
+
+__all__ = [
+    "init_params",
+    "loss_fn",
+    "prefill_fn",
+    "init_cache",
+    "decode_fn",
+    "input_specs",
+    "make_dummy_batch",
+    "param_count",
+    "active_param_count",
+    "model_flops_per_token",
+    "supports_mode",
+]
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.family == "dense":
+        return dense.init_dense(cfg, key)
+    if cfg.family == "moe":
+        return moe.init_moe_model(cfg, key)
+    if cfg.family == "ssm":
+        return xlstm.init_xlstm(cfg, key)
+    if cfg.family == "hybrid":
+        return hybrid.init_zamba(cfg, key)
+    if cfg.family == "encoder":
+        return encoder.init_hubert(cfg, key)
+    if cfg.family == "vlm":
+        return vlm.init_paligemma(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    if cfg.family == "dense":
+        return dense.dense_loss(params, cfg, batch)
+    if cfg.family == "moe":
+        return moe.moe_loss(params, cfg, batch)
+    if cfg.family == "ssm":
+        return xlstm.xlstm_loss(params, cfg, batch)
+    if cfg.family == "hybrid":
+        return hybrid.zamba_loss(params, cfg, batch)
+    if cfg.family == "encoder":
+        return encoder.hubert_loss(params, cfg, batch)
+    if cfg.family == "vlm":
+        return vlm.paligemma_loss(params, cfg, batch)
+    raise ValueError(cfg.family)
+
+
+def prefill_fn(params, cfg: ModelConfig, batch):
+    """Forward over the full sequence (the `prefill` dry-run mode)."""
+    if cfg.family == "dense":
+        logits, _ = dense.dense_forward(params, cfg, batch["tokens"])
+        return logits
+    if cfg.family == "moe":
+        logits, _aux, _c, _h = moe.moe_forward(params, cfg, batch["tokens"])
+        return logits
+    if cfg.family == "ssm":
+        logits, _ = xlstm.xlstm_forward(params, cfg, batch["tokens"])
+        return logits
+    if cfg.family == "hybrid":
+        logits, _ = hybrid.zamba_forward(params, cfg, batch["tokens"])
+        return logits
+    if cfg.family == "encoder":
+        return encoder.hubert_forward(params, cfg, batch["frames"])
+    if cfg.family == "vlm":
+        logits, _ = vlm.paligemma_forward(params, cfg, batch["patches"], batch["tokens"])
+        return logits
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "dense":
+        return dense.init_dense_cache(cfg, batch, max_len)
+    if cfg.family == "moe":
+        return moe.init_moe_cache(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return xlstm.init_xlstm_cache(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return hybrid.init_zamba_cache(cfg, batch, max_len)
+    if cfg.family == "vlm":
+        return vlm.init_paligemma_cache(cfg, batch, max_len)
+    if cfg.family == "encoder":
+        return None
+    raise ValueError(cfg.family)
+
+
+def decode_fn(params, cfg: ModelConfig, cache, tokens, pos):
+    if cfg.family == "dense":
+        return dense.dense_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "moe":
+        return moe.moe_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "ssm":
+        return xlstm.xlstm_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "hybrid":
+        return hybrid.zamba_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "vlm":
+        return vlm.paligemma_decode_step(params, cfg, cache, tokens, pos)
+    raise ValueError(f"{cfg.family} has no decode step")
+
+
+def supports_mode(cfg: ModelConfig, shape: InputShape) -> tuple:
+    """(supported, reason) — documented skips per DESIGN.md §4."""
+    if cfg.family == "encoder" and shape.mode == "decode":
+        return False, "encoder-only: no autoregressive decode"
+    if shape.name == "long_500k":
+        sub_quadratic = cfg.family in ("ssm", "hybrid") or (
+            cfg.attn_kind == "local_global"
+        )
+        if not sub_quadratic:
+            return False, "full-attention arch: 500k context skipped (quadratic)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _batch_struct(cfg: ModelConfig, B: int, S: int, mode: str) -> Dict[str, Any]:
+    i32 = jnp.int32
+    if cfg.family == "encoder":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.frame_dim), cfg.cdtype()),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if cfg.family == "vlm":
+        S_txt = max(S - cfg.num_patches, 16)
+        extra = 1 if mode == "train" else 0
+        return {
+            "patches": jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.patch_dim), cfg.cdtype()),
+            "tokens": jax.ShapeDtypeStruct((B, S_txt + extra), i32),
+        }
+    extra = 1 if mode == "train" else 0
+    if cfg.use_mtp and mode == "train":
+        extra = 2
+    return {"tokens": jax.ShapeDtypeStruct((B, S + extra), i32)}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Dry-run stand-ins for one (arch, input-shape) pair.
+
+    train/prefill: the batch pytree. decode: (cache, tokens, pos).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode in ("train", "prefill"):
+        return {"batch": _batch_struct(cfg, B, S, shape.mode)}
+    cache = init_cache(cfg, B, S)  # concrete zeros; converted by caller if needed
+    cache_specs = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+    return {
+        "cache": cache_specs,
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_dummy_batch(cfg: ModelConfig, B: int, S: int, mode: str, rng: np.random.Generator):
+    """Concrete random batch for smoke tests."""
+    if cfg.family == "encoder":
+        return {
+            "frames": jnp.asarray(rng.normal(size=(B, S, cfg.frame_dim)).astype(np.float32)),
+            "mask": jnp.asarray(rng.random((B, S)) < 0.3),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)),
+        }
+    if cfg.family == "vlm":
+        S_txt = max(S - cfg.num_patches, 16)
+        extra = 1 if mode == "train" else 0
+        return {
+            "patches": jnp.asarray(rng.normal(size=(B, cfg.num_patches, cfg.patch_dim)).astype(np.float32)),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S_txt + extra)).astype(np.int32)),
+        }
+    extra = 1 if mode == "train" else 0
+    if cfg.use_mtp and mode == "train":
+        extra = 2
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + extra)).astype(np.int32))}
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+def expert_param_count(params) -> int:
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        if "experts" in path:
+            total += int(np.prod(leaf.shape))
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        visit("/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path), leaf)
+    return total
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Active params per token: routed experts count at (top_k / E)."""
+    total = param_count(params)
+    if cfg.num_experts:
+        ep = expert_param_count(params)
+        total = total - ep + int(ep * cfg.top_k / cfg.num_experts)
+    return total
+
+
+def model_flops_per_token(params, cfg: ModelConfig, seq_len: int, mode: str = "train") -> float:
+    """MODEL_FLOPS (paper-style 6·N·D accounting) per token.
+
+    6·N_active per token for train (fwd+bwd), 2·N_active for inference,
+    plus the quadratic attention term 12·L·d·S (train) / 4·L·d·S (inference)
+    for attention architectures (0 for pure SSM).
+    """
+    n_active = active_param_count(params, cfg)
+    mult = 6.0 if mode == "train" else 2.0
+    flops = mult * n_active
+    if cfg.family in ("dense", "moe", "vlm", "encoder"):
+        attn_mult = 12.0 if mode == "train" else 4.0
+        flops += attn_mult * cfg.num_layers * cfg.hd * cfg.num_heads * min(seq_len, 10**9) / 2
+    return float(flops)

@@ -1,0 +1,262 @@
+"""Mixture-of-Experts decoder LMs.
+
+Covers:
+  * olmoe-1b-7b — uniform stack: GQA attention + 64-expert top-8 MoE FFN.
+  * deepseek-v3-671b — MLA attention, 3 dense-FFN prefix layers, 58 MoE
+    layers (1 shared + 256 routed top-8), optional MTP head.
+
+Layer stacks are scanned; router aux losses are accumulated through the scan
+and added to the LM loss with ``cfg.router_aux_weight``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.sharding import shard
+from .dense import (
+    _embed,
+    _init_layer,
+    _logits,
+    _maybe_remat,
+    _mlp,
+    cross_entropy,
+    layer_apply,
+)
+from .layers import apply_rope, attention, dense_init, make_rope, rms_norm
+from .mla import init_mla, init_mla_cache, mla_decode_step, mla_forward
+from .moe_dispatch import moe_ffn
+
+__all__ = [
+    "init_moe_model",
+    "moe_forward",
+    "moe_loss",
+    "init_moe_cache",
+    "moe_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_moe_ffn(cfg: ModelConfig, key):
+    d, E, fe = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 7)
+    pd = cfg.pdtype()
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=pd),
+        "experts": {
+            "w_gate": dense_init(ks[1], (E, d, fe), fan_in=d, dtype=pd),
+            "w_in": dense_init(ks[2], (E, d, fe), fan_in=d, dtype=pd),
+            "w_out": dense_init(ks[3], (E, fe, d), fan_in=fe, dtype=pd),
+        },
+    }
+    if cfg.num_shared_experts:
+        fs = fe * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], (d, fs), dtype=pd),
+            "w_in": dense_init(ks[5], (d, fs), dtype=pd),
+            "w_out": dense_init(ks[6], (fs, d), fan_in=fs, dtype=pd),
+        }
+    return p
+
+
+def _init_moe_layer(cfg: ModelConfig, key):
+    k_attn, k_moe = jax.random.split(key)
+    d = cfg.d_model
+    pd = cfg.pdtype()
+    p = {"ln1": jnp.zeros((d,), pd), "ln2": jnp.zeros((d,), pd), "moe": _init_moe_ffn(cfg, k_moe)}
+    if cfg.use_mla:
+        p["attn_mla"] = init_mla(cfg, k_attn)
+    else:
+        H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        ks = jax.random.split(k_attn, 4)
+        p["attn"] = {
+            "wq": dense_init(ks[0], (d, H, hd), fan_in=d, dtype=pd),
+            "wk": dense_init(ks[1], (d, Hkv, hd), fan_in=d, dtype=pd),
+            "wv": dense_init(ks[2], (d, Hkv, hd), fan_in=d, dtype=pd),
+            "wo": dense_init(ks[3], (H, hd, d), fan_in=H * hd, dtype=pd),
+        }
+    return p
+
+
+def _stack(init_one, cfg, keys):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[init_one(cfg, k) for k in keys])
+
+
+def init_moe_model(cfg: ModelConfig, key):
+    k_emb, k_dense, k_moe, k_head, k_mtp = jax.random.split(key, 5)
+    pd = cfg.pdtype()
+    n_moe = cfg.num_layers - cfg.dense_prefix_layers
+    params = {
+        "emb": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), fan_in=cfg.d_model, dtype=pd),
+        "moe_layers": _stack(_init_moe_layer, cfg, jax.random.split(k_moe, n_moe)),
+        "ln_f": jnp.zeros((cfg.d_model,), pd),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=pd),
+    }
+    if cfg.dense_prefix_layers:
+        dense_cfg = cfg  # same dims; plain gated-silu FFN with d_ff
+        params["dense_layers"] = _stack(_init_layer, dense_cfg, jax.random.split(k_dense, cfg.dense_prefix_layers))
+    if cfg.use_mtp:
+        km = jax.random.split(k_mtp, 3)
+        params["mtp"] = {
+            "ln_in": jnp.zeros((2 * cfg.d_model,), pd),
+            "proj": dense_init(km[0], (2 * cfg.d_model, cfg.d_model), dtype=pd),
+            "layer": _init_layer(cfg, km[1]),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+
+def _moe_attention(cfg, p, h, *, q_pos, kv_pos, rope, cache=None, write_pos=None):
+    """Returns (attn_out, new_cache)."""
+    if cfg.use_mla:
+        a_in = h
+        if cache is not None and write_pos is not None:
+            return mla_decode_step(cfg, p["attn_mla"], a_in, cache, write_pos)
+        y, c = mla_forward(cfg, p["attn_mla"], a_in, q_pos=q_pos, collect_cache=cache == "collect")
+        return y, c
+    sin, cos = rope
+    from ..launch import sharding as shd
+
+    kv_spec = "tensor" if cfg.num_kv_heads % max(shd.axis_size("tensor"), 1) == 0 else None
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+    q = shard(apply_rope(q, sin, cos), "batch", None, "tensor", None)
+    k = shard(apply_rope(k, sin, cos), "batch", None, kv_spec, None)
+    v = shard(v, "batch", None, kv_spec, None)
+    if cache is not None and write_pos is not None:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), write_pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), write_pos, axis=1)
+        out = attention(q, kc, vc, q_pos=q_pos, kv_pos=kv_pos, kind="causal")
+        new_cache = (kc, vc)
+    else:
+        out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, kind="causal", block_q=cfg.attn_block_q, impl=cfg.attn_impl)
+        new_cache = (k, v) if cache == "collect" else None
+    # head-parallel -> sequence-parallel handoff (see dense.layer_apply)
+    out = shard(out, "batch", "act_seq", None, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"]), new_cache
+
+
+def moe_layer_apply(cfg, p, h, *, q_pos, kv_pos, rope, cache=None, write_pos=None):
+    attn_out, new_cache = _moe_attention(
+        cfg, p, rms_norm(h, p["ln1"]), q_pos=q_pos, kv_pos=kv_pos, rope=rope,
+        cache=cache, write_pos=write_pos,
+    )
+    h = h + attn_out
+    y, aux = moe_ffn(cfg, p["moe"], rms_norm(h, p["ln2"]))
+    h = h + y
+    return shard(h, "batch", "act_seq", None), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / decode
+# ---------------------------------------------------------------------------
+
+
+def moe_forward(params, cfg: ModelConfig, tokens, *, collect_cache=False):
+    """Returns (logits, aux_mean, caches, h_final)."""
+    h = _embed(cfg, params, tokens)
+    S = h.shape[1]
+    pos = jnp.arange(S)
+    rope = make_rope(pos, cfg.hd, cfg.rope_base)
+    caches = {}
+
+    if cfg.dense_prefix_layers:
+        def dense_body(hh, lp):
+            hh, kv = layer_apply(cfg, lp, hh, "causal", rope, q_pos=pos, kv_pos=pos)
+            return hh, kv if collect_cache else None
+
+        h, dense_kv = jax.lax.scan(_maybe_remat(cfg, dense_body), h, params["dense_layers"])
+        caches["dense"] = dense_kv
+
+    def moe_body(hh, lp):
+        hh, c, aux = moe_layer_apply(
+            cfg, lp, hh, q_pos=pos, kv_pos=pos, rope=rope,
+            cache="collect" if collect_cache else None,
+        )
+        return hh, (c, aux) if collect_cache else (None, aux)
+
+    h, (moe_c, auxes) = jax.lax.scan(_maybe_remat(cfg, moe_body), h, params["moe_layers"])
+    caches["moe"] = moe_c
+    logits = _logits(cfg, params, h)
+    return logits, auxes.mean(), caches if collect_cache else None, h
+
+
+def moe_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]  # (B, S+1) (+2 if MTP wants an extra shift)
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    if cfg.use_mtp:
+        inp = tokens[:, :-2]
+        tgt = tokens[:, 1:-1]
+    logits, aux, _, h = moe_forward(params, cfg, inp)
+    loss = cross_entropy(logits, tgt) + cfg.router_aux_weight * aux
+    if cfg.use_mtp:
+        # MTP depth-1 (DeepSeek-V3 §2.2): combine final hidden with the
+        # embedding of the NEXT token, run one extra layer, predict t+2.
+        nxt_emb = _embed(cfg, params, tokens[:, 1:-1])
+        h_in = jnp.concatenate([rms_norm(h, params["ln_f"]), nxt_emb], axis=-1)
+        h_in = rms_norm(h_in, params["mtp"]["ln_in"])
+        h2 = jnp.einsum("bsd,de->bse", h_in, params["mtp"]["proj"])
+        S = h2.shape[1]
+        pos = jnp.arange(S)
+        rope = make_rope(pos, cfg.hd, cfg.rope_base)
+        h2, _ = layer_apply(cfg, params["mtp"]["layer"], h2, "causal", rope, q_pos=pos, kv_pos=pos)
+        mtp_logits = _logits(cfg, params, h2)
+        loss = loss + cfg.mtp_weight * cross_entropy(mtp_logits, tokens[:, 2:])
+    return loss
+
+
+def init_moe_cache(cfg: ModelConfig, batch: int, max_len: int):
+    caches = {}
+    n_moe = cfg.num_layers - cfg.dense_prefix_layers
+    if cfg.dense_prefix_layers:
+        shape = (cfg.dense_prefix_layers, batch, max_len, cfg.num_kv_heads, cfg.hd)
+        caches["dense"] = (jnp.zeros(shape, cfg.cdtype()), jnp.zeros(shape, cfg.cdtype()))
+    if cfg.use_mla:
+        caches["moe"] = init_mla_cache(cfg, batch, max_len, (n_moe,))
+    else:
+        shape = (n_moe, batch, max_len, cfg.num_kv_heads, cfg.hd)
+        caches["moe"] = (jnp.zeros(shape, cfg.cdtype()), jnp.zeros(shape, cfg.cdtype()))
+    return caches
+
+
+def moe_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    h = _embed(cfg, params, tokens)
+    S_max = jax.tree.leaves(cache["moe"])[0].shape[2]
+    q_pos = pos[None]
+    kv_pos = jnp.arange(S_max)
+    rope = make_rope(q_pos, cfg.hd, cfg.rope_base)
+    new_cache = {}
+
+    if cfg.dense_prefix_layers:
+        def dense_body(hh, inp):
+            lp, c = inp
+            hh, kv = layer_apply(
+                cfg, lp, hh, "causal", rope, q_pos=q_pos, kv_pos=kv_pos,
+                cache_kv=c, write_pos=pos,
+            )
+            return hh, kv
+
+        h, new_cache["dense"] = jax.lax.scan(dense_body, h, (params["dense_layers"], cache["dense"]))
+
+    def moe_body(hh, inp):
+        lp, c = inp
+        hh, c_new, _aux = moe_layer_apply(
+            cfg, lp, hh, q_pos=q_pos, kv_pos=kv_pos, rope=rope, cache=c, write_pos=pos
+        )
+        return hh, c_new
+
+    h, new_cache["moe"] = jax.lax.scan(moe_body, h, (params["moe_layers"], cache["moe"]))
+    return _logits(cfg, params, h), new_cache

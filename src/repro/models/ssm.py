@@ -1,0 +1,303 @@
+"""State-space / recurrent cells: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+All cells come in two forms with identical semantics:
+  * chunked/parallel form used for training and prefill (scan over chunks,
+    quadratic-within-chunk — the TPU-friendly formulation: big einsums on the
+    MXU instead of a length-L sequential scan);
+  * single-step recurrent form used for decode (O(1) state update).
+
+Property tests assert chunked == sequential step-by-step execution.
+
+Shapes:  x (B, L, H, P) heads/headdim;  ssm state (B, H, P, N);
+         mLSTM state (B, H, DK, DV) + normalizer (B, H, DK) + stabilizer (B, H).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ssd_chunked",
+    "ssd_step",
+    "mlstm_chunked",
+    "mlstm_step",
+    "slstm_scan",
+    "slstm_step",
+    "causal_conv1d",
+    "causal_conv1d_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (mamba2 front conv)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state=None):
+    """x: (B, L, C); w: (K, C) depthwise. Returns (y, new_state) where
+    state is the trailing K-1 inputs for streaming decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_state
+
+
+def causal_conv1d_step(x_t: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray):
+    """x_t: (B, 1, C); state: (B, K-1, C)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state.astype(x_t.dtype), x_t], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q). Returns (..., Q, Q) with out[t, s] = sum_{s < r <= t} a[r]
+    for t >= s, -inf below the diagonal band."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, state=None):
+    """Structured state-space duality (Mamba2), chunked.
+
+    Args:
+      x: (B, L, H, P) values.
+      dt: (B, L, H) positive step sizes (post-softplus).
+      A: (H,) negative decay rates.
+      B, C: (B, L, N) shared across heads (G=1 groups).
+      chunk: chunk length (must divide L).
+      state: optional initial state (B, H, P, N).
+
+    Returns: y (B, L, H, P), final_state (B, H, P, N).
+    """
+    Bsz, L, H, P = x.shape
+    N = B.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L, (L, chunk)
+
+    f32 = jnp.float32
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, chunk, H, P), 1, 0)  # (nc, B, Q, H, P)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, chunk, H).astype(f32), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(Bsz, nc, chunk, N).astype(f32), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(Bsz, nc, chunk, N).astype(f32), 1, 0)
+
+    if state is None:
+        state0 = jnp.zeros((Bsz, H, P, N), f32)
+    else:
+        state0 = state.astype(f32)
+
+    def chunk_fn(s, inp):
+        """One chunk: quadratic intra-chunk + carried-state contribution.
+        Scanned (not batched over chunks) so the (B, H, Q, Q) decay matrix
+        exists for ONE chunk at a time; checkpointed so backward recomputes
+        it instead of stacking it across chunks."""
+        xq, dq, Bq, Cq = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        a = jnp.moveaxis(dq * A.astype(f32)[None, None, :], -1, 1)  # (B,H,Q)
+        Lmat = jnp.exp(_segsum(a))  # (B, H, Q, Q)
+        y_diag = jnp.einsum(
+            "bqn,bsn,bhqs,bsh,bshp->bqhp", Cq, Bq, Lmat, dq, xq.astype(f32)
+        )
+        a_cum = jnp.cumsum(a, axis=-1)  # (B, H, Q)
+        in_decay = jnp.exp(a_cum)
+        y_off = jnp.einsum("bqn,bhq,bhpn->bqhp", Cq, in_decay, s)
+        decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)
+        S_c = jnp.einsum("bsn,bhs,bsh,bshp->bhpn", Bq, decay_to_end, dq, xq.astype(f32))
+        s_new = s * jnp.exp(a_cum[..., -1])[..., None, None] + S_c
+        return s_new, (y_diag + y_off).astype(x.dtype)
+
+    body = jax.checkpoint(chunk_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    final_state, ys = jax.lax.scan(body, state0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, H, P)
+    return y, final_state
+
+
+def ssd_step(x_t, dt_t, A, B_t, C_t, state):
+    """One decode step. x_t (B, H, P); dt_t (B, H); B_t, C_t (B, N);
+    state (B, H, P, N). Returns (y (B, H, P), new_state)."""
+    f32 = jnp.float32
+    dec = jnp.exp(dt_t.astype(f32) * A.astype(f32)[None, :])  # (B, H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t.astype(f32), x_t.astype(f32), B_t.astype(f32))
+    new_state = state.astype(f32) * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(f32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — stabilized chunkwise form
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int, state=None):
+    """q, k: (B, L, H, DK); v: (B, L, H, DV); i_pre, f_pre: (B, L, H).
+
+    state: optional (S (B,H,DK,DV), n (B,H,DK), m (B,H)).
+    Returns: h (B, L, H, DV), (S, n, m) final.
+    """
+    Bsz, L, H, DK = q.shape
+    DV = v.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L
+    f32 = jnp.float32
+    scale = DK ** -0.5
+
+    qc = q.reshape(Bsz, nc, chunk, H, DK).astype(f32) * scale
+    kc = k.reshape(Bsz, nc, chunk, H, DK).astype(f32)
+    vc = v.reshape(Bsz, nc, chunk, H, DV).astype(f32)
+    logf = jax.nn.log_sigmoid(f_pre.reshape(Bsz, nc, chunk, H).astype(f32))
+    logi = i_pre.reshape(Bsz, nc, chunk, H).astype(f32)
+
+    F = jnp.cumsum(logf, axis=2)  # (B, nc, Q, H): decay chunk-start..t (incl t)
+    F_last = F[:, :, -1, :]  # (B, nc, H)
+    g = logi - F  # (B, nc, Q, H)
+    g_runmax = jax.lax.cummax(g, axis=2)
+
+    if state is None:
+        S0 = jnp.zeros((Bsz, H, DK, DV), f32)
+        n0 = jnp.zeros((Bsz, H, DK), f32)
+        m0 = jnp.full((Bsz, H), -1e30, f32)
+    else:
+        S0, n0, m0 = (s.astype(f32) for s in state)
+
+    def chunk_fn(carry, inp):
+        S, n, m = carry
+        qq, kk, vv, Fq, gq, gmax, flast = inp
+        # qq (B,Q,H,DK) ...; Fq,gq,gmax (B,Q,H); flast (B,H)
+        m_intra = Fq + gmax  # (B, Q, H)
+        m_inter = Fq + m[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)
+
+        # inter-chunk: h_inter = (q . S) * exp(F + m_prev - m_t)
+        w_inter = jnp.exp(m_inter - m_t)  # (B,Q,H)
+        h_inter = jnp.einsum("bqhk,bhkv->bqhv", qq, S) * w_inter[..., None]
+        l_inter = jnp.einsum("bqhk,bhk->bqh", qq, n) * w_inter
+
+        # intra-chunk: D[t,s] = exp(F_t - F_s + logi_s - m_t) for s <= t
+        # F_t - F_s + logi_s = F_t + g_s
+        Dlog = Fq[:, :, None, :] + gq[:, None, :, :] - m_t[:, :, None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dlog = jnp.where(tri[None, :, :, None], Dlog, -jnp.inf)
+        D = jnp.exp(Dlog)  # (B, Q, S, H)
+        qk = jnp.einsum("bqhk,bshk->bqsh", qq, kk)
+        W = qk * D
+        h_intra = jnp.einsum("bqsh,bshv->bqhv", W, vv)
+        l_intra = jnp.einsum("bqsh->bqh", W)
+
+        denom = jnp.maximum(jnp.abs(l_inter + l_intra), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / denom[..., None]
+
+        # carry update
+        m_new = jnp.maximum(flast + m, flast + gmax[:, -1, :])  # (B, H)
+        w_old = jnp.exp(flast + m - m_new)
+        w_in = jnp.exp(flast[:, None, :] + gq - m_new[:, None, :])  # (B,Q,H)
+        S_new = S * w_old[..., None, None] + jnp.einsum("bqh,bqhk,bqhv->bhkv", w_in, kk, vv)
+        n_new = n * w_old[..., None] + jnp.einsum("bqh,bqhk->bhk", w_in, kk)
+        return (S_new, n_new, m_new), h
+
+    xs = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(F, 1, 0), jnp.moveaxis(g, 1, 0), jnp.moveaxis(g_runmax, 1, 0),
+        jnp.moveaxis(F_last, 1, 0),
+    )
+    # checkpointed: backward recomputes each chunk's (B,Q,S,H) decay matrix
+    # instead of stacking all chunks' residuals
+    chunk_fn = jax.checkpoint(chunk_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    (S, n, m), hs = jax.lax.scan(chunk_fn, (S0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(Bsz, L, H, DV)
+    return h.astype(v.dtype), (S, n, m)
+
+
+def mlstm_step(q_t, k_t, v_t, i_t, f_t, state):
+    """One decode step. q_t,k_t (B,H,DK); v_t (B,H,DV); i_t,f_t (B,H);
+    state (S, n, m). Returns (h (B,H,DV), new_state)."""
+    S, n, m = (s.astype(jnp.float32) for s in state)
+    f32 = jnp.float32
+    DK = q_t.shape[-1]
+    logf = jax.nn.log_sigmoid(f_t.astype(f32))
+    logi = i_t.astype(f32)
+    m_new = jnp.maximum(logf + m, logi)
+    w_old = jnp.exp(logf + m - m_new)
+    w_in = jnp.exp(logi - m_new)
+    kk = k_t.astype(f32)
+    vv = v_t.astype(f32)
+    S_new = S * w_old[..., None, None] + w_in[..., None, None] * kk[..., :, None] * vv[..., None, :]
+    n_new = n * w_old[..., None] + w_in[..., None] * kk
+    qq = q_t.astype(f32) * DK ** -0.5
+    num = jnp.einsum("bhk,bhkv->bhv", qq, S_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qq, n_new)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(v_t.dtype), (S_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, sequential by construction)
+# ---------------------------------------------------------------------------
+
+
+def slstm_step(z_t, i_t, f_t, o_t, state):
+    """z,i,f,o: (B, H, D) pre-activations; state (c, n, m) each (B, H, D)."""
+    c, n, m = state
+    f32 = jnp.float32
+    logf = jax.nn.log_sigmoid(f_t.astype(f32))
+    logi = i_t.astype(f32)
+    m_new = jnp.maximum(logf + m, logi)
+    c_new = jnp.exp(logf + m - m_new) * c + jnp.exp(logi - m_new) * jnp.tanh(z_t.astype(f32))
+    n_new = jnp.exp(logf + m - m_new) * n + jnp.exp(logi - m_new)
+    h = jax.nn.sigmoid(o_t.astype(f32)) * c_new / jnp.maximum(n_new, 1e-6)
+    return h.astype(z_t.dtype), (c_new, n_new, m_new)
+
+
+def slstm_scan(z, i_pre, f_pre, o_pre, r_weights, state=None, unroll: int = 16):
+    """Sequential scan over time with head-wise recurrent connections.
+
+    z, i_pre, f_pre, o_pre: (B, L, H, D). r_weights: dict of (H, D, D)
+    recurrent matrices for each gate. state: optional (c, n, m, h_prev).
+    Returns (h (B, L, H, D), final_state).
+
+    ``unroll``: scan unroll factor. Under GSPMD, the backward of a unit-step
+    scan all-reduces the recurrent-weight gradient EVERY timestep (partial
+    batch-sharded outer products hit a replicated accumulator); unrolling
+    lets XLA sum ``unroll`` partials locally per loop iteration first —
+    measured 4096->256 gradient all-reduces per layer (see EXPERIMENTS §Perf).
+    """
+    Bsz, L, H, D = z.shape
+    if state is None:
+        zeros = jnp.zeros((Bsz, H, D), jnp.float32)
+        state = (zeros, zeros, jnp.full((Bsz, H, D), -1e30, jnp.float32), zeros)
+
+    # Give the recurrent weights an explicit batch axis: scan-AD then
+    # accumulates their gradient with the batch dim intact (batch-sharded,
+    # local), and GSPMD reduces ONCE after the scan — instead of
+    # all-reducing a replicated accumulator every timestep (measured: 99% of
+    # xlstm train collective traffic; EXPERIMENTS §Perf).
+    rb = {k: jnp.broadcast_to(w, (Bsz,) + w.shape) for k, w in r_weights.items()}
+
+    def step(carry, inp):
+        c, n, m, h_prev = carry
+        z_t, i_t, f_t, o_t = inp  # (B, H, D)
+        rec = lambda w: jnp.einsum("bhd,bhde->bhe", h_prev, w)
+        z_t = z_t + rec(rb["rz"])
+        i_t = i_t + rec(rb["ri"])
+        f_t = f_t + rec(rb["rf"])
+        o_t = o_t + rec(rb["ro"])
+        h, (c, n, m) = slstm_step(z_t, i_t, f_t, o_t, (c, n, m))
+        return (c, n, m, h.astype(jnp.float32)), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, i_pre, f_pre, o_pre))
+    L = z.shape[1]
+    u = max(1, min(unroll, L)) if L % max(1, min(unroll, L)) == 0 else 1
+    final, hs = jax.lax.scan(step, state, xs, unroll=u)
+    return jnp.moveaxis(hs, 0, 1), final

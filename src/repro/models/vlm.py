@@ -1,0 +1,76 @@
+"""PaliGemma-style VLM (arXiv:2407.07726).
+
+The SigLIP vision tower is STUBBED per the task spec: inputs are precomputed
+patch embeddings ``(B, num_patches, patch_dim)``. This module implements the
+multimodal projector + gemma-style text decoder with PaliGemma's prefix-LM
+masking (bidirectional over image+prefix tokens, causal over the suffix).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.sharding import shard
+from .dense import (
+    _embed,
+    _logits,
+    cross_entropy,
+    dense_decode_step,
+    init_dense,
+    init_dense_cache,
+    stack_forward,
+)
+from .layers import dense_init
+
+__all__ = [
+    "init_paligemma",
+    "paligemma_forward",
+    "paligemma_loss",
+    "init_paligemma_cache",
+    "paligemma_decode_step",
+]
+
+
+def init_paligemma(cfg: ModelConfig, key):
+    k_text, k_proj = jax.random.split(key)
+    params = init_dense(cfg, k_text)
+    params["patch_proj"] = dense_init(k_proj, (cfg.patch_dim, cfg.d_model), dtype=cfg.pdtype())
+    return params
+
+
+def _fuse(params, cfg, patches, tokens):
+    img = jnp.einsum("bpf,fd->bpd", patches.astype(cfg.cdtype()), params["patch_proj"])
+    if cfg.scale_embedding:
+        img = img * jnp.asarray(cfg.d_model ** 0.5, img.dtype)
+    txt = _embed(cfg, params, tokens)
+    return shard(jnp.concatenate([img, txt], axis=1), "batch", None, None)
+
+
+def paligemma_forward(params, cfg: ModelConfig, patches, tokens, *, collect_cache=False):
+    """patches (B, P, patch_dim); tokens (B, St). Prefix = image patches (+
+    any prompt handled by caller via loss masking). Returns logits over the
+    TEXT positions only."""
+    h = _fuse(params, cfg, patches, tokens)
+    P = patches.shape[1]
+    prefix = jnp.asarray(P, jnp.int32)
+    h, caches = stack_forward(cfg, params["layers"], h, prefix_len=prefix, collect_cache=collect_cache)
+    logits = _logits(cfg, params, h[:, P:, :])
+    return logits, caches
+
+
+def paligemma_loss(params, cfg: ModelConfig, batch):
+    """batch: {patches (B,P,F), tokens (B,St+1)}."""
+    tokens = batch["tokens"]
+    logits, _ = paligemma_forward(params, cfg, batch["patches"], tokens[:, :-1])
+    return cross_entropy(logits, tokens[:, 1:])
+
+
+def init_paligemma_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return init_dense_cache(cfg, batch, max_len)
+
+
+def paligemma_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """Standard causal decode over the (image+text) cache."""
+    return dense_decode_step(params, cfg, cache, tokens, pos)

@@ -1,0 +1,260 @@
+"""xLSTM LM (arXiv:2405.04517): mLSTM blocks with one sLSTM block every
+``cfg.slstm_every`` layers (7:1 ratio for xlstm-1.3b).
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+qk head dim = inner/(2H) (qk_dim_factor 0.5), gates are projections of the
+(pre-conv) up-projected stream, sLSTM blocks have no post-FFN. The cell
+math (exp-gated matrix memory with max-stabilizer; chunkwise == sequential)
+is property-tested in tests/test_ssm_cells.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.sharding import shard
+from .dense import _embed, _logits, _maybe_remat, cross_entropy
+from .layers import dense_init, rms_norm
+from .ssm import (
+    causal_conv1d,
+    causal_conv1d_step,
+    mlstm_chunked,
+    mlstm_step,
+    slstm_scan,
+    slstm_step,
+)
+
+__all__ = [
+    "init_xlstm",
+    "xlstm_forward",
+    "xlstm_loss",
+    "init_xlstm_cache",
+    "xlstm_decode_step",
+]
+
+
+def _dims(cfg: ModelConfig):
+    inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    DV = inner // H
+    DK = max(DV // 2, 1)
+    return inner, H, DK, DV
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_mlstm_block(cfg: ModelConfig, key):
+    d = cfg.d_model
+    inner, H, DK, DV = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    pd = cfg.pdtype()
+    return {
+        "ln": jnp.zeros((d,), pd),
+        "w_up": dense_init(ks[0], (d, 2 * inner), dtype=pd),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, inner), fan_in=cfg.ssm_conv, dtype=pd),
+        # block-diagonal (head-wise) projections, as in the reference impl
+        "wq_m": dense_init(ks[2], (H, DV, DK), fan_in=DV, dtype=pd),
+        "wk_m": dense_init(ks[3], (H, DV, DK), fan_in=DV, dtype=pd),
+        "wv_m": dense_init(ks[4], (H, DV, DV), fan_in=DV, dtype=pd),
+        "wi_gate": dense_init(ks[5], (inner, H), dtype=pd),
+        "wf_gate": dense_init(ks[6], (inner, H), dtype=pd),
+        "f_bias": jnp.full((H,), 3.0, pd),  # open forget gates at init
+        "gn": jnp.zeros((H, DV), pd),
+        "out_proj": dense_init(ks[7], (inner, d), fan_in=inner, dtype=pd),
+    }
+
+
+def _init_slstm_block(cfg: ModelConfig, key):
+    d = cfg.d_model
+    H = cfg.num_heads
+    D = d // H
+    ks = jax.random.split(key, 6)
+    pd = cfg.pdtype()
+    return {
+        "ln": jnp.zeros((d,), pd),
+        "w_zifo": dense_init(ks[0], (d, 4, H * D), fan_in=d, dtype=pd),
+        "rz": dense_init(ks[1], (H, D, D), fan_in=D, dtype=pd, scale=0.3),
+        "ri": dense_init(ks[2], (H, D, D), fan_in=D, dtype=pd, scale=0.3),
+        "rf": dense_init(ks[3], (H, D, D), fan_in=D, dtype=pd, scale=0.3),
+        "ro": dense_init(ks[4], (H, D, D), fan_in=D, dtype=pd, scale=0.3),
+        "f_bias": jnp.full((H * D,), 3.0, pd),
+        "gn": jnp.zeros((H, D), pd),
+        "out_proj": dense_init(ks[5], (d, d), dtype=pd),
+    }
+
+
+def init_xlstm(cfg: ModelConfig, key):
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    pd = cfg.pdtype()
+    period = cfg.slstm_every  # group = (period-1) mLSTM + 1 sLSTM
+    n_groups = cfg.num_layers // period
+    gkeys = jax.random.split(k_blocks, n_groups)
+
+    def init_group(gk):
+        mk = jax.random.split(gk, period)
+        mlstm = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[_init_mlstm_block(cfg, k) for k in mk[:-1]]
+        )
+        return {"mlstm": mlstm, "slstm": _init_slstm_block(cfg, mk[-1])}
+
+    groups = [init_group(k) for k in gkeys]
+    return {
+        "emb": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), fan_in=cfg.d_model, dtype=pd),
+        "groups": jax.tree.map(lambda *xs: jnp.stack(xs), *groups),
+        "ln_f": jnp.zeros((cfg.d_model,), pd),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=pd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_block(cfg, p, h, state=None, step=False):
+    """state: (conv_state (B,K-1,inner), (S,n,m)). Returns (h, new_state)."""
+    inner, H, DK, DV = _dims(cfg)
+    x = rms_norm(h, p["ln"])
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    xm = shard(xm, "batch", None, "tensor")
+    conv_state = state[0] if state is not None else None
+    if step:
+        xc, conv_state = causal_conv1d_step(xm, p["conv_w"], conv_state)
+    else:
+        xc, conv_state = causal_conv1d(xm, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    B, S = x.shape[0], x.shape[1]
+    xc_h = xc.reshape(B, S, H, DV)  # per-head input stream (DV == inner/H)
+    xm_h = xm.reshape(B, S, H, DV)
+    q = jnp.einsum("bshp,hpk->bshk", xc_h, p["wq_m"])
+    k = jnp.einsum("bshp,hpk->bshk", xc_h, p["wk_m"])
+    v = jnp.einsum("bshp,hpk->bshk", xm_h, p["wv_m"])
+    i_pre = jnp.einsum("bse,eh->bsh", xm, p["wi_gate"])
+    f_pre = jnp.einsum("bse,eh->bsh", xm, p["wf_gate"]) + p["f_bias"].astype(jnp.float32)
+
+    cell_state = state[1] if state is not None else None
+    if step:
+        y, cell_state = mlstm_step(
+            q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0], cell_state
+        )
+        y = y[:, None]
+    else:
+        y, cell_state = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=min(cfg.chunk_size, S), state=cell_state)
+    # per-head groupnorm + gate
+    y = rms_norm(y, p["gn"])  # (B,S,H,DV) normalized over DV
+    y = y.reshape(B, S, inner) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return h + out, (conv_state, cell_state)
+
+
+def _slstm_block(cfg, p, h, state=None, step=False):
+    d = cfg.d_model
+    H = cfg.num_heads
+    D = d // H
+    x = rms_norm(h, p["ln"])
+    B, S = x.shape[0], x.shape[1]
+    zifo = jnp.einsum("bsd,dge->bsge", x, p["w_zifo"])  # (B,S,4,H*D)
+    zifo = zifo.at[:, :, 2, :].add(p["f_bias"].astype(zifo.dtype))
+    zifo = zifo.reshape(B, S, 4, H, D)
+    z, i_pre, f_pre, o_pre = (zifo[:, :, g] for g in range(4))
+    r = {k: p[k] for k in ("rz", "ri", "rf", "ro")}
+    if step:
+        c, n, m, h_prev = state
+        rec = lambda w: jnp.einsum("bhd,hde->bhe", h_prev, w)
+        y, (c, n, m) = slstm_step(
+            z[:, 0] + rec(r["rz"]), i_pre[:, 0] + rec(r["ri"]),
+            f_pre[:, 0] + rec(r["rf"]), o_pre[:, 0] + rec(r["ro"]), (c, n, m),
+        )
+        new_state = (c, n, m, y.astype(jnp.float32))
+        y = y[:, None]
+    else:
+        y, new_state = slstm_scan(z, i_pre, f_pre, o_pre, r, state)
+    y = rms_norm(y.astype(h.dtype), p["gn"])  # recurrent path promotes to f32
+    y = y.reshape(B, S, d)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return h + out, new_state
+
+
+def _empty_group_state(cfg, B):
+    inner, H, DK, DV = _dims(cfg)
+    D = cfg.d_model // H
+    period = cfg.slstm_every
+    f32 = jnp.float32
+    m_state = (
+        jnp.zeros((period - 1, B, cfg.ssm_conv - 1, inner), cfg.cdtype()),
+        (
+            jnp.zeros((period - 1, B, H, DK, DV), f32),
+            jnp.zeros((period - 1, B, H, DK), f32),
+            jnp.full((period - 1, B, H), -1e30, f32),
+        ),
+    )
+    s_state = (
+        jnp.zeros((B, H, D), f32),
+        jnp.zeros((B, H, D), f32),
+        jnp.full((B, H, D), -1e30, f32),
+        jnp.zeros((B, H, D), f32),
+    )
+    return {"mlstm": m_state, "slstm": s_state}
+
+
+def init_xlstm_cache(cfg: ModelConfig, batch: int, max_len: int = 0):
+    period = cfg.slstm_every
+    n_groups = cfg.num_layers // period
+    one = _empty_group_state(cfg, batch)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+
+
+def _group_apply(cfg, gp, h, gstate=None, step=False):
+    """One (period-1 mLSTM + 1 sLSTM) group. gstate from init_xlstm_cache."""
+
+    def m_body(hh, inp):
+        lp, lstate = inp
+        hh, new_state = _mlstm_block(cfg, lp, hh, lstate, step=step)
+        return hh, new_state
+
+    if gstate is None:
+        period = cfg.slstm_every
+        B = h.shape[0]
+        gstate = _empty_group_state(cfg, B)
+    m_states = (gstate["mlstm"][0], gstate["mlstm"][1])
+    h, new_m = jax.lax.scan(m_body, h, (gp["mlstm"], m_states))
+    h, new_s = _slstm_block(cfg, gp["slstm"], h, gstate["slstm"], step=step)
+    return shard(h, "batch", "act_seq", None), {"mlstm": new_m, "slstm": new_s}
+
+
+def xlstm_forward(params, cfg: ModelConfig, tokens, *, state=None, collect_state=False):
+    h = _embed(cfg, params, tokens)
+
+    def body(hh, inp):
+        gp, gs = inp
+        hh, new_gs = _group_apply(cfg, gp, hh, gs, step=False)
+        return hh, new_gs if collect_state else None
+
+    if state is None:
+        state = init_xlstm_cache(cfg, tokens.shape[0])
+    h, new_state = jax.lax.scan(_maybe_remat(cfg, body), h, (params["groups"], state))
+    return _logits(cfg, params, h), new_state
+
+
+def xlstm_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    logits, _ = xlstm_forward(params, cfg, tokens[:, :-1])
+    return cross_entropy(logits, tokens[:, 1:])
+
+
+def xlstm_decode_step(params, cfg: ModelConfig, state, tokens, pos=None):
+    h = _embed(cfg, params, tokens)
+
+    def body(hh, inp):
+        gp, gs = inp
+        hh, new_gs = _group_apply(cfg, gp, hh, gs, step=True)
+        return hh, new_gs
+
+    h, new_state = jax.lax.scan(body, h, (params["groups"], state))
+    return _logits(cfg, params, h), new_state

@@ -1,0 +1,7 @@
+from .optimizers import Optimizer, adafactor, adamw, apply_updates, get_optimizer, momentum, sgd
+from .schedules import constant, cosine, linear_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adamw", "adafactor", "apply_updates",
+    "get_optimizer", "constant", "cosine", "warmup_cosine", "linear_decay",
+]

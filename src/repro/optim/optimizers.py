@@ -1,0 +1,171 @@
+"""Pure-JAX optimizers (no external deps): SGD, momentum, AdamW, Adafactor.
+
+Interface mirrors optax: ``opt = adamw(lr)``; ``state = opt.init(params)``;
+``updates, state = opt.update(grads, state, params)``; apply with
+``apply_updates``. All state is a pytree, so optimizers compose with jit,
+scan, vmap, and pjit sharding.
+
+Adafactor (factored second moment, optional no first moment) exists so the
+671B config's optimizer state fits a v5e pod (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "momentum", "adamw", "adafactor", "apply_updates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr * (beta * m + g), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mu_dtype: Optional[jnp.dtype] = None,
+) -> Optimizer:
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mu_dtype or p.dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any  # row second-moment (or full v for <2D params)
+    vc: Any  # col second-moment (zeros placeholder for <2D params)
+
+
+def adafactor(
+    lr: float = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018), momentum-free.
+
+    For params of rank >= 2 the second moment is factored over the last two
+    dims -> O(rows + cols) state instead of O(rows * cols); 1-D params keep a
+    full second moment. This is the memory-fitting choice for the 671B MoE.
+    """
+
+    def is_factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr_like(p):
+            if is_factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_like(p):
+            if is_factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(vr_like, params),
+            vc=jax.tree.map(vc_like, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, vr, vc, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if is_factored(p):
+                new_vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                new_vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                # rank-1 reconstruction of 1/sqrt(v)
+                r = new_vr / jnp.maximum(new_vr.mean(axis=-1, keepdims=True), eps)
+                pre = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(new_vc)[..., None, :] + eps)
+            else:
+                new_vr = beta * vr + (1 - beta) * g2
+                new_vc = vc
+                pre = g32 / (jnp.sqrt(new_vr) + eps)
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(pre)) + eps)
+            pre = pre / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * pre).astype(p.dtype), new_vr, new_vc
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_vr = treedef.flatten_up_to(state.vr)
+        flat_vc = treedef.flatten_up_to(state.vc)
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, vr, vc, p) for g, vr, vc, p in zip(flat_g, flat_vr, flat_vc, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_vr = treedef.unflatten([o[1] for o in outs])
+        new_vc = treedef.unflatten([o[2] for o in outs])
+        return updates, AdafactorState(step=step, vr=new_vr, vc=new_vc)
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw, "adafactor": adafactor}[name](lr, **kw)

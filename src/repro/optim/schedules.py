@@ -1,0 +1,39 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine", "warmup_cosine", "linear_decay"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn
+
+
+def linear_decay(lr: float, total_steps: int):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return lr * (1 - t)
+
+    return fn

@@ -1,0 +1,170 @@
+"""Multi-device correctness tests.
+
+These run in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the flag binds at first jax init, so the main test process can't use it).
+
+Checks:
+  * a2a (shard_map expert-parallel) MoE == dense reference on a (2,4) mesh;
+  * sharded train step loss == single-device loss for a smoke dense arch;
+  * einsum MoE dispatch == dense reference at high capacity.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, timeout=420):
+    src = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+        import sys
+        sys.path.insert(0, %r)
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.launch import sharding as shd
+        """
+        % os.path.join(REPO, "src")
+    ) + textwrap.dedent(body)
+    proc = subprocess.run(
+        [sys.executable, "-c", src], capture_output=True, text=True, timeout=timeout
+    )
+    assert proc.returncode == 0, f"subprocess failed:\nSTDOUT:{proc.stdout}\nSTDERR:{proc.stderr[-3000:]}"
+    return proc.stdout
+
+
+def test_moe_a2a_matches_dense():
+    out = run_sub(
+        """
+        from repro.configs import get_config
+        from repro.models.moe_dispatch import moe_ffn
+        from repro.models import init_params
+
+        cfg = get_config("olmoe-1b-7b", smoke=True).replace(capacity_factor=4.0)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        layer_moe = jax.tree.map(lambda x: x[0], params["moe_layers"])["moe"]
+
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 16, cfg.d_model)).astype(np.float32)) * 0.3
+
+        # dense reference (no mesh)
+        shd.set_mesh(None)
+        y_ref, aux_ref = moe_ffn(cfg.replace(moe_impl="dense"), layer_moe, x)
+
+        # a2a on a (2,4) mesh, tokens sharded over both axes
+        mesh = make_smoke_mesh((2, 4), ("data", "model"))
+        shd.set_mesh(mesh, {"expert": ("model",)})
+        cfg_a2a = cfg.replace(moe_impl="a2a")
+
+        @jax.jit
+        def f(x):
+            y, aux = moe_ffn(cfg_a2a, layer_moe, x)
+            return y, aux
+
+        y_a2a, aux_a2a = f(x)
+        err = float(jnp.max(jnp.abs(y_a2a - y_ref)))
+        print("MAXERR", err)
+        print("AUXERR", float(jnp.abs(aux_a2a - aux_ref)))
+        assert err < 2e-4, err
+        """
+    )
+    assert "MAXERR" in out
+
+
+def test_moe_einsum_matches_dense():
+    out = run_sub(
+        """
+        from repro.configs import get_config
+        from repro.models.moe_dispatch import moe_ffn
+        from repro.models import init_params
+
+        cfg = get_config("olmoe-1b-7b", smoke=True).replace(capacity_factor=8.0)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        layer_moe = jax.tree.map(lambda x: x[0], params["moe_layers"])["moe"]
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(4, 8, cfg.d_model)).astype(np.float32)) * 0.3
+        shd.set_mesh(None)
+        y_ref, _ = moe_ffn(cfg.replace(moe_impl="dense"), layer_moe, x)
+        y_ein, _ = moe_ffn(cfg.replace(moe_impl="einsum"), layer_moe, x)
+        err = float(jnp.max(jnp.abs(y_ein - y_ref)))
+        print("MAXERR", err)
+        assert err < 2e-4, err
+        """
+    )
+    assert "MAXERR" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_sub(
+        """
+        from repro.configs import get_config
+        from repro.launch.steps import (abstract_params, build_train_step,
+                                        batch_pspecs, train_shardings, abstract_opt_state)
+        from repro.models import init_params, make_dummy_batch
+        from repro.optim import get_optimizer
+
+        cfg = get_config("deepseek-7b", smoke=True)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = make_dummy_batch(cfg, 8, 32, "train", rng)
+        step, opt = build_train_step(cfg)
+        opt_state = opt.init(params)
+
+        # single device
+        shd.set_mesh(None)
+        p1, o1, loss1 = jax.jit(step)(params, opt_state, batch)
+
+        # sharded (2,4)
+        mesh = make_smoke_mesh((2, 4), ("data", "model"))
+        shd.set_mesh(mesh, {"act_seq": "model"})
+        ps, osh, bs = train_shardings(cfg, params, opt_state, batch, 8)
+        p2, o2, loss2 = jax.jit(step, in_shardings=(ps, osh, bs),
+                                out_shardings=(ps, osh, None))(params, opt_state, batch)
+        print("LOSS", float(loss1), float(loss2))
+        assert abs(float(loss1) - float(loss2)) < 2e-4
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-3, atol=3e-4)
+        print("PARAMS MATCH")
+        """
+    )
+    assert "PARAMS MATCH" in out
+
+
+def test_serve_step_sharded_runs():
+    out = run_sub(
+        """
+        from repro.configs import get_config
+        from repro.launch.steps import build_serve_step, cache_pspecs, batch_pspecs
+        from repro.models import init_cache, init_params
+        from repro.launch.sharding import param_pspecs
+
+        cfg = get_config("gemma2-2b", smoke=True)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_smoke_mesh((2, 4), ("data", "model"))
+        shd.set_mesh(mesh)
+        B, S = 8, 64
+        cache = init_cache(cfg, B, S)
+        step = build_serve_step(cfg)
+        ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                       is_leaf=lambda x: isinstance(x, P))
+        cs = ns(cache_pspecs(cfg, cache, B, S))
+        ps = ns(param_pspecs(params))
+        tok = jnp.zeros((B, 1), jnp.int32)
+        ts = ns(batch_pspecs(cfg, tok, B))
+        f = jax.jit(step, in_shardings=(ps, cs, ts, NamedSharding(mesh, P())),
+                    out_shardings=(ts, cs))
+        nxt, cache = f(params, cache, tok, jnp.asarray(0, jnp.int32))
+        nxt2, cache = f(params, cache, nxt, jnp.asarray(1, jnp.int32))
+        print("DECODED", np.asarray(nxt2).shape)
+        """
+    )
+    assert "DECODED" in out

@@ -1,0 +1,52 @@
+"""Smoke tests: every example script and launcher runs end-to-end."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def run(args, timeout=420):
+    proc = subprocess.run(
+        [sys.executable] + args, capture_output=True, text=True, timeout=timeout,
+        cwd=REPO, env=ENV,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-2500:]}"
+    return proc.stdout
+
+
+def test_quickstart():
+    out = run(["examples/quickstart.py"])
+    assert "energy saved vs uniform" in out
+
+
+def test_carbon_aware():
+    out = run(["examples/carbon_aware.py"])
+    assert "emissions reduced" in out
+
+
+def test_heterogeneous_cluster():
+    out = run(["examples/heterogeneous_cluster.py"])
+    assert "per-step energy saved" in out
+
+
+def test_fl_energy_training_short():
+    out = run(["examples/fl_energy_training.py", "--rounds", "3", "--clients", "3",
+               "--layers", "1", "--d-model", "64", "--compare"])
+    assert "energy:" in out and "saved" in out
+
+
+def test_train_launcher():
+    out = run(["-m", "repro.launch.train", "--arch", "deepseek-7b", "--rounds", "2",
+               "--clients", "3", "--seq", "16", "--max-batches", "4"])
+    assert "total_energy_J" in out
+
+
+def test_serve_launcher():
+    out = run(["-m", "repro.launch.serve", "--arch", "gemma2-2b", "--batch", "2",
+               "--prompt-len", "8", "--gen", "4"])
+    assert "decode" in out

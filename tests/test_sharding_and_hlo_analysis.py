@@ -1,0 +1,107 @@
+"""Unit tests: parameter sharding rules and the loop-aware HLO cost walker."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+@pytest.fixture(autouse=True)
+def mesh():
+    shd.set_mesh(FakeMesh())
+    yield
+    shd.set_mesh(None)
+
+
+def test_param_rules_basic():
+    assert shd.infer_pspec("layers/attn/wq", (30, 4096, 32, 128)) == P(None, "data", "model", None)
+    assert shd.infer_pspec("layers/attn/wo", (30, 32, 128, 4096)) == P(None, "model", None, "data")
+    assert shd.infer_pspec("layers/mlp/w_in", (30, 4096, 11008)) == P(None, "data", "model")
+    assert shd.infer_pspec("emb", (50304, 2048)) == P("model", "data")
+    assert shd.infer_pspec("ln_f", (2048,)) == P()
+
+
+def test_param_rules_divisibility_fallback():
+    # MQA: kv head dim 1 can't shard over model=16 -> dropped
+    assert shd.infer_pspec("layers/attn/wk", (52, 6144, 1, 128)) == P(None, "data", None, None)
+    # kv=8 not divisible by 16 either
+    assert shd.infer_pspec("layers/attn/wk", (32, 4096, 8, 128)) == P(None, "data", None, None)
+    # odd d_model not divisible by data=16 -> fsdp dropped too
+    assert shd.infer_pspec("layers/mlp/w_in", (2, 100, 48)) == P(None, None, "model")
+
+
+def test_expert_rules_no_axis_duplication():
+    spec = shd.infer_pspec("moe/experts/w_gate", (58, 256, 7168, 2048))
+    flat = [a for part in spec if part is not None for a in ((part,) if isinstance(part, str) else part)]
+    assert len(flat) == len(set(flat)), f"duplicated mesh axis in {spec}"
+
+
+HLO = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %dot.1 = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,8]{1,0} all-gather(%dot.1), channel_id=1, replica_groups=[4,4]<=[16], dimensions={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %ag)
+}
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_walker_expands_while_trip_count():
+    c = analyze_hlo(HLO)
+    # dot: 2 * 8*8 * 8 = 1024 flops per trip, 10 trips (condition constant)
+    assert c.flops == pytest.approx(10 * 1024)
+    # all-gather: 8*8*4 bytes * (n-1)/n with group size 4 -> 192 per trip
+    assert c.coll_bytes["all-gather"] == pytest.approx(10 * 256 * 3 / 4)
+
+
+def test_walker_trip_count_from_backend_config():
+    hlo = HLO.replace(
+        "condition=%cond.1, body=%body.1",
+        'condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}',
+    )
+    c = analyze_hlo(hlo)
+    assert c.flops == pytest.approx(7 * 1024)
+
+
+def test_walker_dus_in_place():
+    hlo = """\
+HloModule t
+
+ENTRY %main (a: f32[128,64], u: f32[1,64]) -> f32[128,64] {
+  %a = f32[128,64]{1,0} parameter(0)
+  %u = f32[1,64]{1,0} parameter(1)
+  %z = s32[] constant(0)
+  ROOT %d = f32[128,64]{1,0} dynamic-update-slice(%a, %u, %z, %z)
+}
+"""
+    c = analyze_hlo(hlo)
+    # in-place: 2 * update bytes (1*64*4), NOT 2 * full buffer
+    assert c.mem_bytes == pytest.approx(2 * 64 * 4)

@@ -1,0 +1,124 @@
+"""Chunked/parallel forms must equal sequential step-by-step execution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import (
+    causal_conv1d,
+    causal_conv1d_step,
+    mlstm_chunked,
+    mlstm_step,
+    slstm_scan,
+    ssd_chunked,
+    ssd_step,
+)
+
+
+def test_causal_conv_streaming():
+    rng = np.random.default_rng(0)
+    B, L, C, K = 2, 12, 5, 4
+    x = jnp.asarray(rng.normal(size=(B, L, C)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, C)).astype(np.float32))
+    y_full, state = causal_conv1d(x, w)
+    # streaming: one step at a time
+    st = jnp.zeros((B, K - 1, C))
+    ys = []
+    for t in range(L):
+        y_t, st = causal_conv1d_step(x[:, t : t + 1], w, st)
+        ys.append(y_t)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_steps), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(st), rtol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_vs_sequential(chunk):
+    rng = np.random.default_rng(1)
+    B, L, H, P, N = 2, 16, 3, 4, 5
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(B, L, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.1, 1.0, size=(H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+
+    y_chunk, st_chunk = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+
+    st = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(L):
+        y_t, st = ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], st)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk), np.asarray(st), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_carry():
+    """Running two chunked segments with carried state == one long run."""
+    rng = np.random.default_rng(2)
+    B, L, H, P, N = 1, 16, 2, 3, 4
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(B, L, H)).astype(np.float32))
+    A = jnp.asarray(-rng.uniform(0.1, 1.0, size=(H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, L, N)).astype(np.float32))
+    y_all, st_all = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    y1, st1 = ssd_chunked(x[:, :8], dt[:, :8], A, Bm[:, :8], Cm[:, :8], chunk=8)
+    y2, st2 = ssd_chunked(x[:, 8:], dt[:, 8:], A, Bm[:, 8:], Cm[:, 8:], chunk=8, state=st1)
+    np.testing.assert_allclose(np.asarray(y_all), np.asarray(jnp.concatenate([y1, y2], 1)), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_all), np.asarray(st2), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 8])
+def test_mlstm_chunked_vs_sequential(chunk):
+    rng = np.random.default_rng(3)
+    B, L, H, DK, DV = 2, 16, 2, 4, 6
+    q = jnp.asarray(rng.normal(size=(B, L, H, DK)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, L, H, DK)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, L, H, DV)).astype(np.float32))
+    i_pre = jnp.asarray(rng.normal(size=(B, L, H)).astype(np.float32))
+    f_pre = jnp.asarray(rng.normal(size=(B, L, H)).astype(np.float32) + 2.0)
+
+    h_chunk, (S, n, m) = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk)
+
+    state = (
+        jnp.zeros((B, H, DK, DV)),
+        jnp.zeros((B, H, DK)),
+        jnp.full((B, H), -1e30),
+    )
+    hs = []
+    for t in range(L):
+        h_t, state = mlstm_step(q[:, t], k[:, t], v[:, t], i_pre[:, t], f_pre[:, t], state)
+        hs.append(h_t)
+    h_seq = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_seq), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(state[0]), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(state[2]), rtol=3e-4, atol=3e-4)
+
+
+def test_mlstm_no_nan_extreme_gates():
+    rng = np.random.default_rng(4)
+    B, L, H, DK, DV = 1, 32, 1, 4, 4
+    q = jnp.asarray(rng.normal(size=(B, L, H, DK)).astype(np.float32))
+    k = q
+    v = jnp.asarray(rng.normal(size=(B, L, H, DV)).astype(np.float32))
+    i_pre = jnp.full((B, L, H), 30.0, jnp.float32)  # extreme exp input gate
+    f_pre = jnp.full((B, L, H), -30.0, jnp.float32)
+    h, _ = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=8)
+    assert np.isfinite(np.asarray(h)).all()
+    i_pre = jnp.full((B, L, H), -40.0, jnp.float32)
+    f_pre = jnp.full((B, L, H), 40.0, jnp.float32)
+    h, _ = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=8)
+    assert np.isfinite(np.asarray(h)).all()
+
+
+def test_slstm_runs_and_is_finite():
+    rng = np.random.default_rng(5)
+    B, L, H, D = 2, 10, 2, 4
+    mk = lambda: jnp.asarray(rng.normal(size=(B, L, H, D)).astype(np.float32))
+    r = {kname: jnp.asarray(rng.normal(size=(H, D, D)).astype(np.float32) * 0.1) for kname in ("rz", "ri", "rf", "ro")}
+    h, final = slstm_scan(mk(), mk(), mk(), mk(), r)
+    assert h.shape == (B, L, H, D)
+    assert np.isfinite(np.asarray(h)).all()

@@ -1,14 +1,16 @@
 """Energy/time Pareto front via the deadline-constrained scheduler
 (beyond-paper; the epsilon-constraint counterpart of the bi-objective work
 the paper cites as [28]). Sweeps the round deadline from the fastest
-feasible round to fully relaxed and reports the energy at each point."""
+feasible round to fully relaxed — the whole grid is solved by ONE batched
+min-plus DP call (:func:`repro.core.deadline_sweep`, DESIGN.md §9) instead
+of a per-deadline Python loop."""
 
 import time
 
 import numpy as np
 
-from repro.core import random_problem, solve_schedule_dp, total_cost
-from repro.core.scheduler import schedule_with_deadline
+from repro.core import deadline_sweep, random_problem, solve_schedule_dp, total_cost
+from repro.core.scheduler import tighten_for_deadline
 
 
 def run(n=8, T=60, points=6):
@@ -25,29 +27,30 @@ def run(n=8, T=60, points=6):
     for _ in range(40):
         mid = (lo + hi) / 2
         try:
-            schedule_with_deadline(p, times, mid)
+            tighten_for_deadline(p, times, mid)
             hi = mid
         except ValueError:
             lo = mid
     d_min = hi
 
+    deadlines = [d_min + frac * (d_max - d_min) + 1e-9 for frac in np.linspace(0, 1, points)]
+    t0 = time.perf_counter()
+    X = deadline_sweep(p, times, deadlines)
+    us = (time.perf_counter() - t0) / points * 1e6
+
     rows = []
     prev_energy = None
-    t0 = time.perf_counter()
-    for frac in np.linspace(0, 1, points):
-        d = d_min + frac * (d_max - d_min) + 1e-9
-        x = schedule_with_deadline(p, times, d)
+    for d, x in zip(deadlines, X):
         e = total_cost(p, x)
         makespan = max(float(times[i][int(x[i])]) for i in range(p.n))
         # Pareto monotonicity: relaxing the deadline never increases energy
         assert prev_energy is None or e <= prev_energy + 1e-9
         prev_energy = e
         rows.append((f"pareto_D{d:.2f}", 0.0, f"energy={e:.2f} makespan={makespan:.2f}"))
-    us = (time.perf_counter() - t0) / points * 1e6
     e_free = total_cost(p, x_free)
     rows.append(
         ("pareto_summary", us,
          f"energy_range=[{e_free:.2f},{prev_energy if points else 0:.2f}] "
-         f"deadline_range=[{d_min:.2f},{d_max:.2f}]")
+         f"deadline_range=[{d_min:.2f},{d_max:.2f}] batched_points={points}")
     )
     return rows

@@ -76,4 +76,31 @@ def run():
             times.append(_time_alg(alg, p))
         exp = float(np.polyfit(np.log(n_grid), np.log(np.maximum(times, 1e-7)), 1)[0])
         rows.append((f"runtime_{alg}_n{n_grid[-1]}", times[-1] * 1e6, f"n_exponent={exp:.2f}"))
+    rows.extend(_batched_vs_looped(rng))
     return rows
+
+
+def _batched_vs_looped(rng, B=8, n=8, T=64):
+    """Batched DP engine vs a Python loop of single jitted solves — a SMALL
+    scaling data point; the headline config and BENCH_batch.json live in
+    bench_batch (so the default harness doesn't time the same sweep twice)."""
+    from benchmarks.bench_batch import make_sweep, time_sweep
+
+    problems = make_sweep(rng, B, n, T)
+    loop_cold, _ = time_sweep(problems, "loop", reps=1, cold=True)
+    batch_cold, _ = time_sweep(problems, "batch", reps=1, cold=True)
+    loop_warm, _ = time_sweep(problems, "loop", reps=3)
+    batch_warm, _ = time_sweep(problems, "batch", reps=3)
+    return [
+        (
+            f"runtime_dp_loop_B{B}",
+            loop_warm / B * 1e6,
+            f"cold={loop_cold:.3f}s warm={loop_warm:.4f}s",
+        ),
+        (
+            f"runtime_dp_batch_B{B}",
+            batch_warm / B * 1e6,
+            f"cold={batch_cold:.3f}s speedup_cold={loop_cold / batch_cold:.1f}x "
+            f"speedup_warm={loop_warm / batch_warm:.1f}x",
+        ),
+    ]

@@ -9,7 +9,7 @@ their devices are less energy-efficient.
 
 import numpy as np
 
-from repro.core import Problem, schedule, total_cost
+from repro.core import Problem, schedule_batch, total_cost
 from repro.core.costs import linear_cost
 
 # (region, carbon g/kWh, device J/batch, max batches)
@@ -33,8 +33,9 @@ def main():
     e_prob = Problem(T=T, lower=[0] * n, upper=[u for *_, u in FLEET], cost_tables=energy_tables)
     c_prob = Problem(T=T, lower=[0] * n, upper=[u for *_, u in FLEET], cost_tables=carbon_tables)
 
-    x_energy = schedule(e_prob, "auto")
-    x_carbon = schedule(c_prob, "auto")
+    # both objectives solved in ONE batched DP call (DESIGN.md §9): the
+    # energy and carbon instances stack on the same fleet shape
+    x_energy, x_carbon = schedule_batch([e_prob, c_prob], "dp_batch")
 
     print(f"{'region':>12} | {'J/batch':>7} | {'g/kWh':>6} | {'x (min J)':>9} | {'x (min CO2)':>11}")
     print("-" * 60)

@@ -15,7 +15,7 @@ from .costs import (
     sublinear_cost,
     superlinear_cost,
 )
-from .jax_dp import solve_schedule_dp_jax
+from .jax_dp import solve_schedule_dp_batch, solve_schedule_dp_jax
 from .marginal import marco, mardec, mardecun, marin
 from .mc2mkp import (
     ItemClass,
@@ -27,25 +27,38 @@ from .mc2mkp import (
 )
 from .problem import (
     Problem,
+    ProblemBatch,
     remove_lower_limits,
     restore_lower_limits,
     total_cost,
+    total_cost_batch,
     validate_schedule,
+    validate_schedule_batch,
 )
-from .scheduler import ALGORITHMS, schedule, select_algorithm
+from .scheduler import (
+    ALGORITHMS,
+    deadline_sweep,
+    schedule,
+    schedule_batch,
+    select_algorithm,
+)
 
 __all__ = [
     "Problem",
+    "ProblemBatch",
     "remove_lower_limits",
     "restore_lower_limits",
     "total_cost",
+    "total_cost_batch",
     "validate_schedule",
+    "validate_schedule_batch",
     "ItemClass",
     "MC2MKPSolution",
     "solve_mc2mkp",
     "mc2mkp_matrices",
     "solve_schedule_dp",
     "solve_schedule_dp_jax",
+    "solve_schedule_dp_batch",
     "brute_force_schedule",
     "marin",
     "marco",
@@ -57,6 +70,8 @@ __all__ = [
     "random_schedule",
     "greedy_marginal",
     "schedule",
+    "schedule_batch",
+    "deadline_sweep",
     "select_algorithm",
     "ALGORITHMS",
     "DEVICE_CLASSES",

@@ -19,15 +19,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.ops import BIG, minplus_step
-from .problem import Problem, remove_lower_limits, restore_lower_limits
+from ..kernels.ops import BIG, minplus_step_batch
+from .problem import (
+    Problem,
+    ProblemBatch,
+    remove_lower_limits,
+    restore_lower_limits,
+)
 
-__all__ = ["solve_schedule_dp_jax", "dp_tables_jax", "pack_problem"]
+__all__ = [
+    "solve_schedule_dp_jax",
+    "solve_schedule_dp_batch",
+    "dp_tables_jax",
+    "dp_tables_batch_jax",
+    "pack_problem",
+]
 
 
-def pack_problem(p0: Problem):
-    """Dense (n, W) cost matrix for a 0-lower-limit instance; entries beyond
-    U_i are BIG so those items are never selected."""
+def pack_problem(p0):
+    """Dense BIG-padded cost array for 0-lower-limit instance(s).
+
+    A :class:`Problem` packs to ``(n, W)``; a :class:`ProblemBatch` packs to
+    ``(B, n, W)`` (its stacked tables are already dense — they are saturated
+    to BIG and downcast). Entries beyond each ``U_i`` are BIG so those item
+    sizes are never selected.
+    """
+    if isinstance(p0, ProblemBatch):
+        return jnp.asarray(np.minimum(p0.costs, float(BIG)).astype(np.float32))
     W = int(p0.upper.max()) + 1
     n = p0.n
     costs = np.full((n, W), float(BIG), dtype=np.float32)
@@ -39,28 +57,17 @@ def pack_problem(p0: Problem):
 
 @functools.partial(jax.jit, static_argnames=("T", "backend"))
 def dp_tables_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
-    """Scans the DP over classes. Returns (K_last (T+1,), I (n, T+1))."""
-
-    def step(krow, cost_i):
-        kout, iout = minplus_step(krow, cost_i, backend=backend)
-        return kout, iout
-
-    # Z_0: only capacity 0 is packable at zero cost.
-    k0 = jnp.full((T + 1,), BIG, jnp.float32).at[0].set(0.0)
-    k_last, I = jax.lax.scan(step, k0, costs)
-    return k_last, I
+    """Scans the DP over classes for ONE instance: the ``B = 1`` slice of
+    :func:`dp_tables_batch_jax`. Returns (K_last (T+1,), I (n, T+1))."""
+    k_last, I = dp_tables_batch_jax(costs[None], T, backend=backend)
+    return k_last[0], I[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("T",))
 def backtrack_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
-    """Reverse scan: x_i = I[i, t]; t -= x_i (weights == item index)."""
-
-    def step(t, irow):
-        j = irow[t]
-        return t - j, j
-
-    _, xs_rev = jax.lax.scan(step, t_star.astype(jnp.int32), I[::-1])
-    return xs_rev[::-1]
+    """Reverse scan: x_i = I[i, t]; t -= x_i (weights == item index). The
+    ``B = 1`` slice of :func:`backtrack_batch_jax`."""
+    return backtrack_batch_jax(I[:, None], jnp.asarray(t_star)[None], T)[0]
 
 
 def solve_schedule_dp_jax(problem: Problem, backend: str = "ref") -> np.ndarray:
@@ -74,3 +81,72 @@ def solve_schedule_dp_jax(problem: Problem, backend: str = "ref") -> np.ndarray:
     t_star = jnp.asarray(p0.T)
     x0 = np.asarray(jax.device_get(backtrack_jax(I, t_star, int(p0.T))))
     return restore_lower_limits(problem, x0.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Batched solver: B instances in one jitted program (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("T", "backend"))
+def dp_tables_batch_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
+    """Scans the DP over classes for a whole batch at once.
+
+    Args:
+      costs: ``(B, n, W)`` packed tables (0-lower-limit instances).
+      T: static row width — the max ``T'`` across the batch; rows are shared,
+        per-instance workloads only enter at backtracking via ``t_star``.
+
+    Returns (K_last ``(B, T+1)``, I ``(n, B, T+1)``).
+    """
+
+    def step(krow, cost_i):
+        kout, iout = minplus_step_batch(krow, cost_i, backend=backend)
+        return kout, iout
+
+    B = costs.shape[0]
+    k0 = jnp.full((B, T + 1), BIG, jnp.float32).at[:, 0].set(0.0)
+    # scan over the class axis: xs must lead with n
+    k_last, I = jax.lax.scan(step, k0, jnp.swapaxes(costs, 0, 1))
+    return k_last, I
+
+
+@functools.partial(jax.jit, static_argnames=("T",))
+def backtrack_batch_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
+    """Batched reverse scan: per instance, x_i = I[i, b, t_b]; t_b -= x_i.
+
+    ``t_star`` is ``(B,)`` — each instance starts from its own filled
+    capacity, so ragged workloads coexist in one padded program.
+    """
+
+    def step(t, irow):  # t: (B,), irow: (B, T+1)
+        j = jnp.take_along_axis(irow, t[:, None].astype(jnp.int32), axis=1)[:, 0]
+        return t - j, j
+
+    _, xs_rev = jax.lax.scan(step, t_star.astype(jnp.int32), I[::-1])
+    return jnp.swapaxes(xs_rev[::-1], 0, 1)  # (B, n)
+
+
+def solve_schedule_dp_batch(problems, backend: str = "ref") -> np.ndarray:
+    """Solves ``B`` scheduling instances with ONE jitted batched DP.
+
+    Accepts a sequence of :class:`Problem` (ragged ``n``/``U_i``/``T`` are
+    padded into a dense stack) or a prebuilt :class:`ProblemBatch`. Returns a
+    ``(B, n)`` int64 array of schedules — row ``b`` solves instance ``b``;
+    columns past an instance's own ``n`` are 0.
+
+    The whole sweep is two jit calls (DP scan + backtrack) specialized on the
+    padded shape ``(B, n, W, T_max)``, so closely-related what-if instances
+    (deadline sweeps, candidate workloads, dropout subsets) share one
+    compilation and one kernel launch instead of ``B``.
+    """
+    batch = problems if isinstance(problems, ProblemBatch) else ProblemBatch.from_problems(problems)
+    batch.validate()
+    b0 = remove_lower_limits(batch)
+    costs = pack_problem(b0)
+    Tmax = int(b0.T.max())
+    _, I = dp_tables_batch_jax(costs, Tmax, backend=backend)
+    # Scheduling instances always fill the knapsack: T*_b == T'_b.
+    t_star = jnp.asarray(b0.T, dtype=jnp.int32)
+    X0 = np.asarray(jax.device_get(backtrack_batch_jax(I, t_star, Tmax)))
+    return restore_lower_limits(batch, X0.astype(np.int64))

@@ -24,12 +24,19 @@ import numpy as np
 
 __all__ = [
     "Problem",
+    "ProblemBatch",
     "Schedule",
     "remove_lower_limits",
     "restore_lower_limits",
     "total_cost",
+    "total_cost_batch",
     "validate_schedule",
+    "validate_schedule_batch",
 ]
+
+# Large-but-finite stand-in for +inf in dense packed tables (mirrors
+# repro.kernels.ref.BIG; duplicated here so core carries no kernel import).
+PACK_BIG = 1e30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +148,100 @@ class Problem:
         return "arbitrary"
 
 
+@dataclasses.dataclass(frozen=True)
+class ProblemBatch:
+    """A stack of ``B`` Minimal Cost FL Schedule instances in one dense,
+    batch-first representation (DESIGN.md §9).
+
+    Ragged instances are padded to common ``n`` (resource axis) and ``W``
+    (cost-table width, ``max_i U_i + 1``):
+
+      * padded *resources* get ``L = U = 0`` and cost table ``[0, BIG, ...]``
+        so the DP assigns them exactly 0 tasks at 0 cost;
+      * padded *table entries* beyond each ``U_i`` are ``BIG`` so those item
+        sizes are never selected.
+
+    Attributes:
+      T: ``(B,)`` int array of per-instance workloads.
+      lower: ``(B, n)`` int array of lower limits.
+      upper: ``(B, n)`` int array of upper limits.
+      costs: ``(B, n, W)`` float array; ``costs[b, i, j] = C_i(j)`` for
+        instance ``b``, ``BIG``-padded beyond ``U_i``.
+    """
+
+    T: np.ndarray
+    lower: np.ndarray
+    upper: np.ndarray
+    costs: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(self, "T", np.asarray(self.T, dtype=np.int64))
+        object.__setattr__(self, "lower", np.asarray(self.lower, dtype=np.int64))
+        object.__setattr__(self, "upper", np.asarray(self.upper, dtype=np.int64))
+        object.__setattr__(self, "costs", np.asarray(self.costs, dtype=np.float64))
+        if self.costs.ndim != 3:
+            raise ValueError(f"costs must be (B, n, W), got {self.costs.shape}")
+        B, n, W = self.costs.shape
+        if self.T.shape != (B,) or self.lower.shape != (B, n) or self.upper.shape != (B, n):
+            raise ValueError("T/lower/upper shapes disagree with costs")
+        if W < int(self.upper.max()) + 1:
+            raise ValueError("cost tables narrower than max upper limit + 1")
+
+    @property
+    def B(self) -> int:
+        return self.costs.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.costs.shape[1]
+
+    @property
+    def W(self) -> int:
+        return self.costs.shape[2]
+
+    @staticmethod
+    def from_problems(problems: Sequence["Problem"]) -> "ProblemBatch":
+        """Stacks (possibly ragged) instances; each is validated first."""
+        if not problems:
+            raise ValueError("need at least one problem")
+        for p in problems:
+            p.validate()
+        B = len(problems)
+        n = max(p.n for p in problems)
+        W = max(int(p.upper.max()) for p in problems) + 1
+        T = np.array([p.T for p in problems], dtype=np.int64)
+        lower = np.zeros((B, n), dtype=np.int64)
+        upper = np.zeros((B, n), dtype=np.int64)
+        costs = np.full((B, n, W), PACK_BIG, dtype=np.float64)
+        costs[:, :, 0] = 0.0  # padded resources: only x=0, at zero cost
+        for b, p in enumerate(problems):
+            lower[b, : p.n] = p.lower
+            upper[b, : p.n] = p.upper
+            for i, tbl in enumerate(p.cost_tables):
+                costs[b, i, : len(tbl)] = tbl
+                costs[b, i, len(tbl) :] = PACK_BIG
+        return ProblemBatch(T=T, lower=lower, upper=upper, costs=costs)
+
+    def instance(self, b: int) -> "Problem":
+        """Materializes instance ``b`` as a standalone :class:`Problem`
+        (padded resources are kept, as 0-task-only classes)."""
+        tables = tuple(
+            self.costs[b, i, : int(self.upper[b, i]) + 1] for i in range(self.n)
+        )
+        return Problem(T=int(self.T[b]), lower=self.lower[b], upper=self.upper[b], cost_tables=tables)
+
+    def validate(self) -> None:
+        if np.any(self.lower < 0):
+            raise ValueError("lower limits must be non-negative")
+        if np.any(self.upper < self.lower):
+            raise ValueError("upper limit below lower limit")
+        lo_sum = self.lower.sum(axis=1)
+        up_sum = self.upper.sum(axis=1)
+        if np.any(self.T < lo_sum) or np.any(self.T > up_sum):
+            bad = np.nonzero((self.T < lo_sum) | (self.T > up_sum))[0]
+            raise ValueError(f"instances {bad.tolist()} have T outside the feasible range")
+
+
 Schedule = np.ndarray  # (n,) int array of assignments x_i
 
 
@@ -158,12 +259,36 @@ def validate_schedule(problem: Problem, x: Schedule) -> None:
         raise ValueError("schedule violates limits")
 
 
-def remove_lower_limits(problem: Problem) -> Problem:
-    """Equivalent instance with all lower limits shifted to zero.
+def total_cost_batch(batch: ProblemBatch, X: np.ndarray) -> np.ndarray:
+    """(B,) total cost of each row of ``X`` ((B, n) assignments) under its
+    instance's packed cost tables."""
+    X = np.asarray(X, dtype=np.int64)
+    picked = np.take_along_axis(batch.costs, X[:, :, None], axis=2)[:, :, 0]
+    return picked.sum(axis=1)
+
+
+def validate_schedule_batch(batch: ProblemBatch, X: np.ndarray) -> None:
+    X = np.asarray(X)
+    if X.shape != (batch.B, batch.n):
+        raise ValueError(f"schedule shape {X.shape} != ({batch.B}, {batch.n})")
+    if np.any(X.sum(axis=1) != batch.T):
+        bad = np.nonzero(X.sum(axis=1) != batch.T)[0]
+        raise ValueError(f"instances {bad.tolist()}: task totals != T")
+    if np.any(X < batch.lower) or np.any(X > batch.upper):
+        raise ValueError("batched schedule violates limits")
+
+
+def remove_lower_limits(problem):
+    """Equivalent instance(s) with all lower limits shifted to zero.
 
     Paper Section 5.2, eqs. (8)-(10):
       T' = T - sum L_i;  U'_i = U_i - L_i;  C'_i(j) = C_i(j + L_i) - C_i(L_i).
+
+    Accepts a :class:`Problem` or a :class:`ProblemBatch` (the shift is
+    applied per instance, vectorized over the whole batch).
     """
+    if isinstance(problem, ProblemBatch):
+        return _remove_lower_limits_batch(problem)
     Tp = problem.T - int(problem.lower.sum())
     upper = problem.upper - problem.lower
     tables = tuple(
@@ -173,6 +298,24 @@ def remove_lower_limits(problem: Problem) -> Problem:
     return Problem(T=Tp, lower=np.zeros(problem.n, dtype=np.int64), upper=upper, cost_tables=tables)
 
 
-def restore_lower_limits(problem: Problem, x_prime: Schedule) -> Schedule:
-    """Paper eq. (11): x_i = x'_i + L_i."""
+def _remove_lower_limits_batch(batch: ProblemBatch) -> ProblemBatch:
+    """Vectorized eqs. (8)-(10) over a ``(B, n, W)`` stack: each cost row is
+    left-shifted by its ``L`` and rebased to ``C(L) = 0``; vacated tail
+    entries become BIG."""
+    B, n, W = batch.costs.shape
+    Tp = batch.T - batch.lower.sum(axis=1)
+    upper = batch.upper - batch.lower
+    j = np.arange(W)[None, None, :]  # (1, 1, W)
+    src = j + batch.lower[:, :, None]  # (B, n, W) source index C(j + L)
+    valid = src <= batch.upper[:, :, None]
+    base = np.take_along_axis(batch.costs, batch.lower[:, :, None], axis=2)  # C(L)
+    shifted = np.take_along_axis(batch.costs, np.minimum(src, W - 1), axis=2) - base
+    costs = np.where(valid, shifted, PACK_BIG)
+    return ProblemBatch(T=Tp, lower=np.zeros((B, n), dtype=np.int64), upper=upper, costs=costs)
+
+
+def restore_lower_limits(problem, x_prime):
+    """Paper eq. (11): x_i = x'_i + L_i. Batch-aware: with a
+    :class:`ProblemBatch` and ``(B, n)`` assignments, adds each instance's
+    lower limits row-wise."""
     return np.asarray(x_prime) + problem.lower

@@ -21,12 +21,22 @@ from typing import Callable, Dict
 import numpy as np
 
 from . import baselines
-from .jax_dp import solve_schedule_dp_jax
+from .jax_dp import solve_schedule_dp_batch, solve_schedule_dp_jax
 from .marginal import marco, mardec, mardecun, marin
 from .mc2mkp import solve_schedule_dp
 from .problem import Problem, total_cost, validate_schedule
 
-__all__ = ["schedule", "ALGORITHMS", "select_algorithm"]
+__all__ = [
+    "schedule",
+    "schedule_batch",
+    "deadline_sweep",
+    "ALGORITHMS",
+    "select_algorithm",
+]
+
+# algorithm names that run the (MC)^2MKP DP — in the batched entry point all
+# of these route through the one batched min-plus program
+_DP_ALGORITHMS = {"dp", "dp_jax", "dp_batch", "dp_jax_pallas"}
 
 ALGORITHMS: Dict[str, Callable] = {
     "dp": solve_schedule_dp,
@@ -69,6 +79,57 @@ def schedule(problem: Problem, algorithm: str = "auto", check: bool = True) -> n
     return x
 
 
+def schedule_batch(
+    problems,
+    algorithm: str = "auto",
+    check: bool = True,
+    backend: str = "ref",
+):
+    """Solves ``B`` instances, batching every DP solve into ONE jitted
+    min-plus program (DESIGN.md §9).
+
+    Dispatch mirrors :func:`schedule`:
+      * ``algorithm="auto"``: each instance's regime is detected; instances
+        with a marginal-algorithm regime (MarIn/MarCo/MarDec/MarDecUn — all
+        Θ(n log n) or better, cheaper than any batching win) are solved
+        per-instance, and the remaining arbitrary-regime instances are
+        stacked into one :func:`solve_schedule_dp_batch` call.
+      * any DP algorithm name (``dp``, ``dp_jax``, ``dp_batch``,
+        ``dp_jax_pallas``): ALL instances go through the batched DP
+        (``dp_jax_pallas`` selects the Pallas kernel backend).
+      * any other named algorithm: a plain per-instance loop.
+
+    Returns a list of ``(n_b,)`` int64 schedules, one per input instance.
+    """
+    problems = list(problems)
+    if not problems:
+        return []
+    out = [None] * len(problems)
+    dp_idx = []
+    if algorithm == "auto":
+        for b, p in enumerate(problems):
+            alg = select_algorithm(p)
+            if alg == "dp":
+                dp_idx.append(b)
+            else:
+                out[b] = ALGORITHMS[alg](p)
+    elif algorithm in _DP_ALGORITHMS:
+        dp_idx = list(range(len(problems)))
+        if algorithm == "dp_jax_pallas":
+            backend = "pallas"
+    else:
+        for b, p in enumerate(problems):
+            out[b] = schedule(p, algorithm, check=False)
+    if dp_idx:
+        X = solve_schedule_dp_batch([problems[b] for b in dp_idx], backend=backend)
+        for row, b in zip(X, dp_idx):
+            out[b] = np.asarray(row[: problems[b].n], dtype=np.int64)
+    if check:
+        for p, x in zip(problems, out):
+            validate_schedule(p, x)
+    return out
+
+
 def schedule_cost(problem: Problem, algorithm: str = "auto") -> float:
     return total_cost(problem, schedule(problem, algorithm))
 
@@ -95,6 +156,13 @@ def schedule_with_deadline(
 
     Raises ValueError if the deadline makes the instance infeasible.
     """
+    return schedule(tighten_for_deadline(problem, time_tables, deadline), algorithm)
+
+
+def tighten_for_deadline(problem: Problem, time_tables, deadline: float) -> Problem:
+    """The deadline-tightened instance: ``U_i' = max{j : time_i(j) <= D}``
+    (clipped to ``U_i``). Raises ValueError if infeasible — a device cannot
+    meet its lower limit, or fleet capacity drops below ``T``."""
     new_upper = []
     for i in range(problem.n):
         t = np.asarray(time_tables[i], dtype=np.float64)
@@ -111,7 +179,7 @@ def schedule_with_deadline(
             f"deadline {deadline} infeasible: fleet capacity "
             f"{sum(new_upper)} < T={problem.T}"
         )
-    tight = Problem(
+    return Problem(
         T=problem.T,
         lower=problem.lower,
         upper=np.asarray(new_upper),
@@ -119,4 +187,37 @@ def schedule_with_deadline(
             tbl[: u + 1] for tbl, u in zip(problem.cost_tables, new_upper)
         ),
     )
-    return schedule(tight, algorithm)
+
+
+def deadline_sweep(
+    problem: Problem,
+    time_tables,
+    deadlines,
+    check: bool = True,
+    backend: str = "ref",
+) -> np.ndarray:
+    """Pareto-front builder: energy-minimal schedules for a whole grid of
+    deadlines in ONE batched DP solve.
+
+    Constructs the ``B`` deadline-tightened instances (same ``n`` and ``T``,
+    progressively looser ``U_i``) and stacks them through
+    :func:`solve_schedule_dp_batch`, so the entire epsilon-constraint sweep
+    costs one compilation + one kernel launch instead of ``B``.
+
+    Returns a ``(B, n)`` int64 array, row ``b`` optimal for ``deadlines[b]``.
+    Raises ValueError (naming the offending deadline) if any point is
+    infeasible — probe feasibility first if sweeping below the makespan
+    floor.
+    """
+    deadlines = list(deadlines)
+    tight = []
+    for d in deadlines:
+        try:
+            tight.append(tighten_for_deadline(problem, time_tables, float(d)))
+        except ValueError as e:
+            raise ValueError(f"deadline_sweep point {d}: {e}") from e
+    X = solve_schedule_dp_batch(tight, backend=backend)[:, : problem.n]
+    if check:
+        for p, x in zip(tight, X):
+            validate_schedule(p, x)
+    return X.astype(np.int64)

@@ -15,19 +15,30 @@ Per round (McMahan et al. [1] + this paper's contribution):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.problem import total_cost
+from ..core.jax_dp import solve_schedule_dp_batch
+from ..core.problem import Problem, total_cost
 from ..core.scheduler import schedule
 from ..optim.optimizers import Optimizer
 from .client import make_client_fn
 from .energy import EnergyEstimator
 
-__all__ = ["FLRoundResult", "FederatedServer"]
+__all__ = ["FLRoundResult", "ScenarioReport", "FederatedServer", "apply_dropout"]
+
+
+@dataclasses.dataclass
+class ScenarioReport:
+    """Per-round what-if analysis (DESIGN.md §9): candidate workloads and
+    dropout subsets, ALL solved by one batched (MC)^2MKP DP call."""
+
+    labels: list  # human-readable scenario descriptions, e.g. "T=120", "drop=2,5"
+    assignments: np.ndarray  # (B, n) schedule per scenario
+    energies: np.ndarray  # (B,) estimated Joules per scenario
 
 
 @dataclasses.dataclass
@@ -38,6 +49,23 @@ class FLRoundResult:
     energy_joules: float  # true total energy charged
     estimated_joules: float  # what the scheduler thought it would cost
     makespan_joules: float  # max per-device energy (OLAR's objective, for contrast)
+    scenarios: Optional[ScenarioReport] = None  # what-if planning, if enabled
+
+
+def apply_dropout(problem: Problem, dropped) -> Problem:
+    """The instance after clients ``dropped`` leave the fleet (paper §6 "loss
+    of a device"): their limits collapse to 0 and the workload shrinks to the
+    surviving capacity if necessary."""
+    dropped = set(int(i) for i in dropped)
+    gone = np.array([i in dropped for i in range(problem.n)])
+    lower = np.where(gone, 0, problem.lower)
+    upper = np.where(gone, 0, problem.upper)
+    tables = tuple(
+        np.zeros(1) if i in dropped else tbl
+        for i, tbl in enumerate(problem.cost_tables)
+    )
+    T_eff = int(np.clip(problem.T, lower.sum(), upper.sum()))
+    return Problem(T=T_eff, lower=lower, upper=upper, cost_tables=tables)
 
 
 class FederatedServer:
@@ -49,10 +77,25 @@ class FederatedServer:
         estimator: EnergyEstimator,
         algorithm: str = "auto",
         participation_floor: Optional[int] = None,
+        round_T: Optional[int] = None,
+        scenario_T_candidates: Optional[Sequence[int]] = None,
+        scenario_dropouts: Optional[Sequence[Sequence[int]]] = None,
     ):
+        """``round_T``: total mini-batches scheduled per round; ``None``
+        defaults to half the round tensor's capacity (and can still be set
+        later, e.g. by :func:`repro.fl.rounds.run_campaign`).
+
+        ``scenario_T_candidates`` / ``scenario_dropouts`` enable the per-round
+        scenario-planning hook: alternative workloads and client-dropout
+        subsets are evaluated against the CURRENT energy estimates via one
+        batched DP solve and attached to each :class:`FLRoundResult`.
+        """
         self.params = init_params
         self.estimator = estimator
         self.algorithm = algorithm
+        self.round_T = round_T
+        self.scenario_T_candidates = list(scenario_T_candidates or ())
+        self.scenario_dropouts = [tuple(s) for s in (scenario_dropouts or ())]
         self.n_clients = len(estimator.fleet)
         if participation_floor is not None:
             for d in estimator.fleet:
@@ -94,17 +137,7 @@ class FederatedServer:
         T = self._round_T(batches)
         est_problem = self.estimator.problem(T)
         if unavailable:
-            dropped = set(int(i) for i in unavailable)
-            lower = np.where([i in dropped for i in range(self.n_clients)], 0, est_problem.lower)
-            upper = np.where([i in dropped for i in range(self.n_clients)], 0, est_problem.upper)
-            tables = tuple(
-                np.zeros(1) if i in dropped else tbl
-                for i, tbl in enumerate(est_problem.cost_tables)
-            )
-            T_eff = min(T, int(upper.sum()))
-            from ..core.problem import Problem
-
-            est_problem = Problem(T=T_eff, lower=lower, upper=upper, cost_tables=tables)
+            est_problem = apply_dropout(est_problem, unavailable)
         x = schedule(est_problem, self.algorithm)
         est_cost = total_cost(est_problem, x)
 
@@ -118,6 +151,8 @@ class FederatedServer:
         for i, dev in enumerate(self.estimator.fleet):
             if x[i] > 0:
                 self.estimator.observe(i, int(x[i]), dev.measure(int(x[i]), rng))
+        # what-if planning for the NEXT round, on the freshest estimates
+        scenarios = self._plan_scenarios(T)
         return FLRoundResult(
             round_index=round_index,
             assignments=np.asarray(x),
@@ -125,14 +160,34 @@ class FederatedServer:
             energy_joules=float(true_cost),
             estimated_joules=float(est_cost),
             makespan_joules=float(max(per_dev)),
+            scenarios=scenarios,
         )
 
     def _round_T(self, batches) -> int:
-        """Round workload: total batches to schedule = what the round tensor
-        can hold at most per client, times a utilization target — here simply
-        the configured T stored on the server by the driver."""
-        if not hasattr(self, "round_T"):
-            # default: half the total capacity of the round tensor
+        """Round workload: the explicitly configured ``round_T`` if set,
+        otherwise half the total capacity of the round tensor."""
+        if self.round_T is None:
             n, s = batches.shape[0], batches.shape[1]
             return (n * s) // 2
-        return self.round_T
+        return int(self.round_T)
+
+    def _plan_scenarios(self, T: int) -> Optional[ScenarioReport]:
+        """Evaluates every configured what-if (candidate workloads, dropout
+        subsets) against the current energy estimates with ONE batched DP
+        solve; returns None when no scenarios are configured."""
+        if not self.scenario_T_candidates and not self.scenario_dropouts:
+            return None
+        base = self.estimator.problem(T)
+        problems, labels = [], []
+        for Tc in self.scenario_T_candidates:
+            Tc_eff = int(np.clip(int(Tc), int(base.lower.sum()), int(base.upper.sum())))
+            problems.append(self.estimator.problem(Tc_eff))
+            labels.append(f"T={Tc_eff}")
+        for sub in self.scenario_dropouts:
+            problems.append(apply_dropout(base, sub))
+            labels.append("drop=" + ",".join(str(int(i)) for i in sorted(set(sub))))
+        X = solve_schedule_dp_batch(problems)[:, : self.n_clients]
+        energies = np.array(
+            [total_cost(p, X[b]) for b, p in enumerate(problems)], dtype=np.float64
+        )
+        return ScenarioReport(labels=labels, assignments=X, energies=energies)

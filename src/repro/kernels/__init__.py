@@ -9,8 +9,17 @@ attention probabilities never touch HBM; selected via ``attn_impl='pallas'``.
 """
 
 from .flash_attention import flash_attention
-from .minplus import minplus_pallas
-from .ops import BIG, minplus_step
-from .ref import minplus_step_ref
+from .minplus import minplus_pallas, minplus_pallas_batch
+from .ops import BIG, minplus_step, minplus_step_batch
+from .ref import minplus_step_ref, minplus_step_ref_batch
 
-__all__ = ["minplus_step", "minplus_pallas", "minplus_step_ref", "BIG", "flash_attention"]
+__all__ = [
+    "minplus_step",
+    "minplus_step_batch",
+    "minplus_pallas",
+    "minplus_pallas_batch",
+    "minplus_step_ref",
+    "minplus_step_ref_batch",
+    "BIG",
+    "flash_attention",
+]

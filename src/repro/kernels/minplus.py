@@ -10,7 +10,11 @@ banded read is an in-bounds dynamic slice. The inner ``fori_loop`` walks the
 band, performing length-``BT`` vector min/argmin updates — (8,128)-friendly
 when ``BT`` is a multiple of 1024.
 
-Layout:
+The batched engine (DESIGN.md §9) is the source of truth: one ``(b, ot)``
+grid over independent batch elements, each with its own previous row resident
+in VMEM. The single-instance entry point is its ``B = 1`` slice.
+
+Layout (per batch element):
   kprev_pad : (W + Tp,)  previous row, first W entries = BIG
   cost      : (W,)       class cost table, padded with BIG
   out tiles : (BT,) values + (BT,) int32 argmin
@@ -26,21 +30,23 @@ from jax.experimental import pallas as pl
 
 from .ref import BIG
 
-__all__ = ["minplus_pallas", "DEFAULT_BT"]
+__all__ = ["minplus_pallas", "minplus_pallas_batch", "DEFAULT_BT"]
 
 DEFAULT_BT = 1024  # 8 sublanes x 128 lanes
 
 
-def _minplus_kernel(kprev_pad_ref, cost_ref, kout_ref, iout_ref, *, BT: int, W: int):
-    ot = pl.program_id(0)
+def _minplus_batch_kernel(kprev_pad_ref, cost_ref, kout_ref, iout_ref, *, BT: int, W: int):
+    """Grid is ``(b, ot)``; each program owns one output tile of one batch
+    element, with that element's whole padded previous row resident in VMEM
+    (block ``(1, W + Tpad)`` selected by the batch grid axis)."""
+    ot = pl.program_id(1)
     base = ot * BT  # absolute t of this tile's first element
 
     def body(j, carry):
         best, best_idx = carry
         # window[dt] = kprev_pad[W + base + dt - j]  == K_{i-1}[base + dt - j]
-        start = W + base - j
-        window = kprev_pad_ref[pl.dslice(start, BT)]
-        cand = window + cost_ref[j]
+        window = kprev_pad_ref[0, pl.dslice(W + base - j, BT)]
+        cand = window + cost_ref[0, j]
         cand = jnp.where(cand >= BIG, BIG, cand)
         improved = cand < best
         best = jnp.where(improved, cand, best)
@@ -49,8 +55,61 @@ def _minplus_kernel(kprev_pad_ref, cost_ref, kout_ref, iout_ref, *, BT: int, W: 
 
     init = (jnp.full((BT,), BIG, jnp.float32), jnp.zeros((BT,), jnp.int32))
     best, best_idx = jax.lax.fori_loop(0, W, body, init)
-    kout_ref[...] = best
-    iout_ref[...] = best_idx
+    kout_ref[0, ...] = best
+    iout_ref[0, ...] = best_idx
+
+
+@functools.partial(jax.jit, static_argnames=("BT", "interpret"))
+def minplus_pallas_batch(
+    kprev: jnp.ndarray,
+    cost: jnp.ndarray,
+    *,
+    BT: int = DEFAULT_BT,
+    interpret: bool = True,
+) -> tuple:
+    """Batched DP row update via Pallas. Same contract as
+    :func:`repro.kernels.ref.minplus_step_ref_batch`: ``kprev (B, T+1)``,
+    ``cost (B, W)`` -> ``(B, T+1)`` values + int32 argmins.
+
+    One ``(b, ot)`` grid; batch elements are independent, so the grid is
+    embarrassingly parallel across both axes. ``interpret=True`` executes the
+    kernel body in Python on CPU (this container has no TPU); on TPU hardware
+    pass ``interpret=False``.
+    """
+    kprev = kprev.astype(jnp.float32)
+    cost = cost.astype(jnp.float32)
+    B, Tp = kprev.shape
+    W = cost.shape[1]
+    pad_t = (-Tp) % BT
+    Tpad = Tp + pad_t
+    kprev_pad = jnp.concatenate(
+        [
+            jnp.full((B, W), BIG, jnp.float32),
+            kprev,
+            jnp.full((B, pad_t), BIG, jnp.float32),
+        ],
+        axis=1,
+    )
+    grid = (B, Tpad // BT)
+    kout, iout = pl.pallas_call(
+        functools.partial(_minplus_batch_kernel, BT=BT, W=W),
+        grid=grid,
+        in_specs=[
+            # previous rows stay whole in VMEM: every tile reads a sliding band
+            pl.BlockSpec((1, W + Tpad), lambda b, ot: (b, 0)),
+            pl.BlockSpec((1, W), lambda b, ot: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BT), lambda b, ot: (b, ot)),
+            pl.BlockSpec((1, BT), lambda b, ot: (b, ot)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tpad), jnp.float32),
+            jax.ShapeDtypeStruct((B, Tpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(kprev_pad, cost)
+    return kout[:, :Tp], iout[:, :Tp]
 
 
 @functools.partial(jax.jit, static_argnames=("BT", "interpret"))
@@ -61,38 +120,9 @@ def minplus_pallas(
     BT: int = DEFAULT_BT,
     interpret: bool = True,
 ) -> tuple:
-    """One DP row update via Pallas. Same contract as
-    :func:`repro.kernels.ref.minplus_step_ref`.
-
-    ``interpret=True`` executes the kernel body in Python on CPU (this
-    container has no TPU); on TPU hardware pass ``interpret=False``.
-    """
-    kprev = kprev.astype(jnp.float32)
-    cost = cost.astype(jnp.float32)
-    Tp = kprev.shape[0]
-    W = cost.shape[0]
-    pad_t = (-Tp) % BT
-    Tpad = Tp + pad_t
-    kprev_pad = jnp.concatenate(
-        [jnp.full((W,), BIG, jnp.float32), kprev, jnp.full((pad_t,), BIG, jnp.float32)]
+    """One DP row update via Pallas: the ``B = 1`` slice of the batched
+    kernel. Same contract as :func:`repro.kernels.ref.minplus_step_ref`."""
+    kout, iout = minplus_pallas_batch(
+        jnp.asarray(kprev)[None], jnp.asarray(cost)[None], BT=BT, interpret=interpret
     )
-    grid = (Tpad // BT,)
-    kout, iout = pl.pallas_call(
-        functools.partial(_minplus_kernel, BT=BT, W=W),
-        grid=grid,
-        in_specs=[
-            # previous row stays whole in VMEM: every tile reads a sliding band
-            pl.BlockSpec(kprev_pad.shape, lambda ot: (0,)),
-            pl.BlockSpec(cost.shape, lambda ot: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((BT,), lambda ot: (ot,)),
-            pl.BlockSpec((BT,), lambda ot: (ot,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Tpad,), jnp.float32),
-            jax.ShapeDtypeStruct((Tpad,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(kprev_pad, cost)
-    return kout[:Tp], iout[:Tp]
+    return kout[0], iout[0]

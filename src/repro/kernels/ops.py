@@ -10,10 +10,10 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .minplus import minplus_pallas
-from .ref import BIG, minplus_step_ref
+from .minplus import minplus_pallas, minplus_pallas_batch
+from .ref import BIG, minplus_step_ref, minplus_step_ref_batch
 
-__all__ = ["minplus_step", "BIG"]
+__all__ = ["minplus_step", "minplus_step_batch", "BIG"]
 
 
 def minplus_step(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "ref"):
@@ -23,4 +23,15 @@ def minplus_step(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "ref"):
         return minplus_pallas(kprev, cost, interpret=True)
     if backend == "pallas_tpu":
         return minplus_pallas(kprev, cost, interpret=False)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def minplus_step_batch(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "ref"):
+    """Batched row update: ``kprev (B, T+1)``, ``cost (B, W)``."""
+    if backend == "ref":
+        return minplus_step_ref_batch(kprev, cost)
+    if backend == "pallas":
+        return minplus_pallas_batch(kprev, cost, interpret=True)
+    if backend == "pallas_tpu":
+        return minplus_pallas_batch(kprev, cost, interpret=False)
     raise ValueError(f"unknown backend {backend!r}")

@@ -10,13 +10,17 @@ The (MC)^2MKP relaxation for one contiguous class (paper eq. 4, with
 which is a min-plus convolution of the previous DP row with the class's cost
 table, banded to width ``W = U_i + 1``. This module is the reference
 implementation the Pallas kernel is validated against.
+
+The batched form is the source of truth (DESIGN.md §9); the single-instance
+oracle is its ``B = 1`` slice, so tie-breaking can never diverge between the
+two paths.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["minplus_step_ref", "BIG"]
+__all__ = ["minplus_step_ref", "minplus_step_ref_batch", "BIG"]
 
 # Large-but-finite stand-in for +inf: keeps arithmetic NaN-free in float32
 # while dominating any real cost (energy values in this codebase are << 1e30).
@@ -24,8 +28,37 @@ __all__ = ["minplus_step_ref", "BIG"]
 BIG = 1e30
 
 
+def minplus_step_ref_batch(kprev: jnp.ndarray, cost: jnp.ndarray):
+    """Batched DP row update — ``B`` independent instances at once.
+
+    Args:
+      kprev: ``(B, T+1)`` previous rows ``Z_{i-1}`` (BIG where infeasible).
+      cost:  ``(B, W)`` per-instance class cost tables ``C_i(0..U_i)``,
+        padded with BIG.
+
+    Returns:
+      (kout, iout): ``(B, T+1)`` new rows and ``(B, T+1)`` int32 argmin item
+      ``j`` (first minimum along ascending ``j`` wins).
+    """
+    kprev = jnp.asarray(kprev).astype(jnp.float32)
+    cost = jnp.asarray(cost).astype(jnp.float32)
+    Tp = kprev.shape[1]
+    W = cost.shape[1]
+    t = jnp.arange(Tp)[:, None]  # (Tp, 1)
+    j = jnp.arange(W)[None, :]  # (1, W)
+    src = t - j  # (Tp, W) index into each kprev row
+    valid = src >= 0
+    gathered = jnp.take(kprev, jnp.clip(src, 0, Tp - 1), axis=1)  # (B, Tp, W)
+    cand = jnp.where(valid[None], gathered + cost[:, None, :], BIG)
+    # saturate: anything that touched BIG stays BIG (avoid BIG+x drift)
+    cand = jnp.where(cand >= BIG, BIG, cand)
+    kout = cand.min(axis=2)
+    iout = cand.argmin(axis=2).astype(jnp.int32)
+    return kout, iout
+
+
 def minplus_step_ref(kprev: jnp.ndarray, cost: jnp.ndarray):
-    """One DP row update.
+    """One DP row update: the ``B = 1`` slice of the batched oracle.
 
     Args:
       kprev: ``(T+1,)`` previous row ``Z_{i-1}`` (BIG where infeasible).
@@ -34,19 +67,7 @@ def minplus_step_ref(kprev: jnp.ndarray, cost: jnp.ndarray):
     Returns:
       (kout, iout): ``(T+1,)`` new row and ``(T+1,)`` int32 argmin item j.
     """
-    kprev = kprev.astype(jnp.float32)
-    cost = cost.astype(jnp.float32)
-    Tp = kprev.shape[0]
-    W = cost.shape[0]
-    t = jnp.arange(Tp)[:, None]  # (Tp, 1)
-    j = jnp.arange(W)[None, :]  # (1, W)
-    src = t - j  # index into kprev
-    valid = src >= 0
-    gathered = jnp.where(valid, kprev[jnp.clip(src, 0, Tp - 1)], BIG)
-    cand = gathered + cost[None, :]
-    cand = jnp.where(valid, cand, BIG)
-    # saturate: anything that touched BIG stays BIG (avoid BIG+x drift)
-    cand = jnp.where(cand >= BIG, BIG, cand)
-    kout = cand.min(axis=1)
-    iout = cand.argmin(axis=1).astype(jnp.int32)
-    return kout, iout
+    kout, iout = minplus_step_ref_batch(
+        jnp.asarray(kprev)[None], jnp.asarray(cost)[None]
+    )
+    return kout[0], iout[0]

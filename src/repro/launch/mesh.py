@@ -16,11 +16,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (256-chip pod) or 2x16x16 (two pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # no explicit axis_types: Auto is the default wherever the kwarg exists,
+    # and jax versions without jax.sharding.AxisType don't accept it
+    return jax.make_mesh(shape, axes)
 
 
 def make_smoke_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for multi-device CPU tests (8 forced host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -1,7 +1,7 @@
 """xLSTM LM (arXiv:2405.04517): mLSTM blocks with one sLSTM block every
 ``cfg.slstm_every`` layers (7:1 ratio for xlstm-1.3b).
 
-Simplifications vs the reference implementation (documented in DESIGN.md):
+Simplifications vs the reference implementation (documented in DESIGN.md §4):
 qk head dim = inner/(2H) (qk_dim_factor 0.5), gates are projections of the
 (pre-conv) up-projected stream, sLSTM blocks have no post-FFN. The cell
 math (exp-gated matrix memory with max-stabilizer; chunkwise == sequential)

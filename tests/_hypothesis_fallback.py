@@ -1,0 +1,93 @@
+"""Minimal stand-in for the slice of the ``hypothesis`` API our tests use,
+so tier-1 collects and runs on a clean container without pip installs.
+
+Implements ``given`` / ``settings`` / ``strategies.{integers, sampled_from,
+composite}`` with deterministic seeded sampling (seed derived from the test
+name). No shrinking, no example database — install the real ``hypothesis``
+(see requirements-dev.txt) to get those; this module steps aside
+automatically when it is importable (see the guarded import in
+``test_core_scheduling.py``).
+"""
+
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    """A sampler: ``example(rng)`` draws one value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def _composite(fn):
+    """``@st.composite``: ``fn(draw, *args, **kwargs)`` becomes a strategy
+    factory; ``draw`` pulls values from sub-strategies."""
+
+    def builder(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+
+        return _Strategy(sample)
+
+    return builder
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    sampled_from=_sampled_from,
+    composite=_composite,
+)
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator recording ``max_examples`` on the (already-``given``-wrapped)
+    test; ``deadline`` and anything else is accepted and ignored."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies_args):
+    """Runs the test body once per drawn example, deterministically: the rng
+    seed is derived from the test function's name, so failures reproduce."""
+
+    def deco(fn):
+        # NOT functools.wraps: pytest must not see the original signature,
+        # or it would try to resolve the drawn parameters as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strategies_args))
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -11,7 +11,11 @@ Paper claims validated here:
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean container: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     ItemClass,

@@ -1,11 +1,16 @@
 """Flash-attention Pallas kernel vs the pure-jnp oracle
 (repro.models.layers.attention): forward + gradients, across mask kinds,
-GQA ratios, softcap, and block shapes. Interpret mode (CPU container)."""
+GQA ratios, softcap, and block shapes. Interpret mode (CPU container).
+
+Interpret-mode Pallas is slow — the whole module is marked ``slow`` and
+excluded from tier-1 (run the full suite with -m "slow or not slow")."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.kernels.flash_attention import flash_attention
 from repro.models.layers import attention

@@ -54,7 +54,7 @@ def test_ref_matches_numpy(Tp, W):
     (255, 64, 64),
     (1024, 256, 256),
     (1000, 511, 128),
-    (2048, 1024, 1024),
+    pytest.param(2048, 1024, 1024, marks=pytest.mark.slow),  # big interpret-mode sweep
     (33, 33, 1024),  # tile larger than the row
 ])
 def test_pallas_matches_ref(Tp, W, BT):

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Perf regression gate: compare emitted BENCH_*.json against baselines.
+
+Replaces the old hardcoded ``speedup_vs_loop >= 5.0`` assert in ci.sh with a
+general policy over every benchmark JSON:
+
+  * **gated metrics** (GATED below — the stable, dimensionless headline
+    ratio per file; for files not listed there, every ``speedup``/
+    ``throughput`` key): a drop of more than ``--tolerance`` (default 30%)
+    below the baseline FAILS, and a gated metric that *disappears* from the
+    current output (a silently-skipped benchmark leg) also FAILS.
+  * **absolute floors** (FLOORS below) encode hard promises — e.g. the
+    batched engine must stay >= 5x over looped solves, and a cached sweep
+    solve must stay >= 5x over cold — regardless of what the baseline says.
+  * **everything else** (raw wall-clock ``_s`` seconds, warm-path
+    micro-ratios like ``speedup_warm`` that legitimately swing 2x between
+    identical runs, the CPU-sharded ``throughput_ratio`` smoke) is printed
+    in the trajectory table but never gates.
+  * a missing baseline is fine (first run): the current numbers are
+    reported as NEW and pass.
+
+Usage (what ci.sh runs)::
+
+    python scripts/check_bench.py --baseline-dir .bench_baseline BENCH_*.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+RATIO_PREFIXES = ("speedup", "throughput")
+TIME_SUFFIX = "_s"
+
+# Baseline-gated metrics per file: only the stable headline ratios. Known
+# files gate nothing else (BENCH_batch.json's speedup_warm moves 2x between
+# identical runs — gating it would make CI flaky by design); files NOT
+# listed here get the conservative default of gating every ratio metric
+# until someone tunes an entry in.
+GATED = {
+    "BENCH_batch.json": ("speedup_vs_loop",),
+    "BENCH_sweep.json": ("speedup_cached_vs_cold",),
+}
+
+# Hard floors: benchmark file -> {metric: minimum}. These hold even on the
+# very first run, when no baseline exists yet.
+FLOORS = {
+    "BENCH_batch.json": {"speedup_vs_loop": 5.0},
+    "BENCH_sweep.json": {"speedup_cached_vs_cold": 5.0},
+}
+
+
+def flatten(d: dict, prefix: str = "") -> dict:
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, key + "."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def is_gated(name: str, key: str) -> bool:
+    explicit = GATED.get(name)
+    if explicit is not None:
+        return key in explicit
+    return key.rsplit(".", 1)[-1].startswith(RATIO_PREFIXES)
+
+
+def check_file(path: str, baseline_dir: str, tolerance: float) -> list:
+    """Returns a list of failure strings; prints the trajectory table."""
+    fails = []
+    cur = flatten(json.load(open(path)))
+    name = os.path.basename(path)
+    base_path = os.path.join(baseline_dir, name)
+    base = flatten(json.load(open(base_path))) if os.path.exists(base_path) else None
+
+    print(f"\n== {name} " + ("" if base is not None else "(NEW — no baseline)"))
+    print(f"  {'metric':<32} {'baseline':>12} {'current':>12} {'delta':>8}  status")
+    for key in sorted(cur):
+        val = cur[key]
+        ref = base.get(key) if base else None
+        delta = "" if ref in (None, 0) else f"{(val - ref) / abs(ref) * 100:+.1f}%"
+        status = "info"
+        if is_gated(name, key):
+            status = "ok"
+            if ref is not None and val < ref * (1.0 - tolerance):
+                status = "FAIL"
+                fails.append(
+                    f"{name}: {key} regressed {val:.2f} < {ref:.2f} "
+                    f"* (1 - {tolerance:.0%})"
+                )
+        floor = FLOORS.get(name, {}).get(key)
+        if floor is not None and val < floor:
+            status = "FAIL"
+            fails.append(f"{name}: {key} = {val:.2f} below hard floor {floor}")
+        ref_s = f"{ref:.4g}" if ref is not None else "-"
+        print(f"  {key:<32} {ref_s:>12} {val:>12.4g} {delta:>8}  {status}")
+
+    # a gated metric that vanished (e.g. a benchmark leg silently skipped)
+    # must not pass unnoticed
+    expected = set(GATED.get(name, ()))
+    if base is not None:
+        expected |= {k for k in base if is_gated(name, k)}
+    for key in sorted(expected - set(cur)):
+        fails.append(f"{name}: gated metric {key} missing from current output")
+        print(f"  {key:<32} {'?':>12} {'MISSING':>12} {'':>8}  FAIL")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", help="benchmark JSONs (default: BENCH_*.json)")
+    ap.add_argument("--baseline-dir", default=".bench_baseline")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.30,
+        help="allowed fractional drop in ratio metrics vs baseline (default 0.30)",
+    )
+    args = ap.parse_args()
+
+    files = args.files or sorted(
+        f for f in os.listdir(".") if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not files:
+        print("check_bench: no BENCH_*.json files found — nothing to gate")
+        return 1
+
+    fails = []
+    for path in files:
+        if not os.path.exists(path):
+            fails.append(f"{path}: benchmark output missing (did the smoke crash?)")
+            continue
+        try:
+            fails.extend(check_file(path, args.baseline_dir, args.tolerance))
+        except (json.JSONDecodeError, OSError) as e:
+            fails.append(f"{path}: unreadable ({e})")
+
+    print()
+    if fails:
+        for f in fails:
+            print(f"check_bench: FAIL — {f}", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK ({len(files)} file(s), tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

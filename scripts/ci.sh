@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI entry point: dev deps (best-effort — tier-1 runs without network thanks
-# to tests/_hypothesis_fallback.py), tier-1 tests, and the batched-engine
-# perf smoke that emits BENCH_batch.json for perf-trajectory tracking.
+# to tests/_hypothesis_fallback.py), lint, tier-1 tests, the perf smokes
+# (BENCH_batch.json + BENCH_sweep.json), and the regression gate
+# (scripts/check_bench.py) against the committed baselines.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,19 +12,47 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 pip install -q -r requirements-dev.txt 2>/dev/null \
   || echo "ci.sh: pip install failed (offline?) — continuing with bundled fallbacks"
 
-# 2. tier-1 tests (pytest.ini default deselects the slow interpret-mode
+# 2. lint (non-fatal only when ruff is UNAVAILABLE — same offline pattern as
+#    the hypothesis fallback; when ruff is present, findings fail the build)
+if python -m ruff --version >/dev/null 2>&1; then
+  python -m ruff check .
+else
+  echo "ci.sh: ruff unavailable (offline?) — skipping lint"
+fi
+
+# 3. tier-1 tests (pytest.ini default deselects the slow interpret-mode
 #    Pallas / flash-attention sweeps; full suite: -m "slow or not slow")
 python -m pytest -x -q
 
-# 3. batched scheduling engine perf smoke -> BENCH_batch.json
-python benchmarks/bench_batch.py --smoke --out BENCH_batch.json
+# 4. snapshot the COMMITTED benchmark baselines (HEAD) before the smokes
+#    overwrite the working-tree copies — comparing against the previous
+#    local run instead would let regressions ratchet past the 30% tolerance
+#    one ci.sh invocation at a time. Outside a git checkout (tarball), fall
+#    back to the working-tree copy; a missing baseline entirely (first run)
+#    is fine — check_bench reports NEW.
+rm -rf .bench_baseline
+mkdir -p .bench_baseline
+for f in BENCH_*.json; do
+  if [ -e "$f" ]; then
+    if ! git show "HEAD:$f" > ".bench_baseline/$f" 2>/dev/null; then
+      rm -f ".bench_baseline/$f"
+      cp "$f" ".bench_baseline/$f"
+    fi
+  fi
+done
 
-python - <<'EOF'
-import json
-r = json.load(open("BENCH_batch.json"))
-print(f"ci.sh: batched DP speedup at B={r['B']}: "
-      f"cold {r['speedup_cold']:.1f}x, warm {r['speedup_warm']:.1f}x")
-assert r["speedup_vs_loop"] >= 5.0, "batched engine regression: < 5x over looped solves"
-EOF
+# 5. perf smokes — a crash here must fail CI with the real error, not a
+#    stale-JSON KeyError from a later step
+if ! python benchmarks/bench_batch.py --smoke --out BENCH_batch.json; then
+  echo "ci.sh: FAIL — bench_batch.py perf smoke crashed" >&2
+  exit 1
+fi
+if ! python benchmarks/bench_sweep.py --smoke --out BENCH_sweep.json; then
+  echo "ci.sh: FAIL — bench_sweep.py perf smoke crashed" >&2
+  exit 1
+fi
+
+# 6. regression gate: ratio metrics vs baseline (30% tolerance) + hard floors
+python scripts/check_bench.py --baseline-dir .bench_baseline BENCH_*.json
 
 echo "ci.sh: OK"

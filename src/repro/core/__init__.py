@@ -42,6 +42,13 @@ from .scheduler import (
     schedule_batch,
     select_algorithm,
 )
+from .sweep import (
+    SweepEngine,
+    bucket_shape,
+    default_engine,
+    make_sweep_mesh,
+    solve_dp_batch_cached,
+)
 
 __all__ = [
     "Problem",
@@ -74,6 +81,11 @@ __all__ = [
     "deadline_sweep",
     "select_algorithm",
     "ALGORITHMS",
+    "SweepEngine",
+    "bucket_shape",
+    "default_engine",
+    "make_sweep_mesh",
+    "solve_dp_batch_cached",
     "DEVICE_CLASSES",
     "device_fleet_problem",
     "linear_cost",

@@ -88,17 +88,9 @@ def solve_schedule_dp_jax(problem: Problem, backend: str = "ref") -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("T", "backend"))
-def dp_tables_batch_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
-    """Scans the DP over classes for a whole batch at once.
-
-    Args:
-      costs: ``(B, n, W)`` packed tables (0-lower-limit instances).
-      T: static row width — the max ``T'`` across the batch; rows are shared,
-        per-instance workloads only enter at backtracking via ``t_star``.
-
-    Returns (K_last ``(B, T+1)``, I ``(n, B, T+1)``).
-    """
+def _dp_tables_batch(costs: jnp.ndarray, T: int, backend: str = "ref"):
+    """Unjitted body of :func:`dp_tables_batch_jax` — the sweep engine
+    (``core/sweep.py``) closes over this inside its own per-bucket jits."""
 
     def step(krow, cost_i):
         kout, iout = minplus_step_batch(krow, cost_i, backend=backend)
@@ -111,13 +103,22 @@ def dp_tables_batch_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
     return k_last, I
 
 
-@functools.partial(jax.jit, static_argnames=("T",))
-def backtrack_batch_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
-    """Batched reverse scan: per instance, x_i = I[i, b, t_b]; t_b -= x_i.
+@functools.partial(jax.jit, static_argnames=("T", "backend"))
+def dp_tables_batch_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
+    """Scans the DP over classes for a whole batch at once.
 
-    ``t_star`` is ``(B,)`` — each instance starts from its own filled
-    capacity, so ragged workloads coexist in one padded program.
+    Args:
+      costs: ``(B, n, W)`` packed tables (0-lower-limit instances).
+      T: static row width — the max ``T'`` across the batch; rows are shared,
+        per-instance workloads only enter at backtracking via ``t_star``.
+
+    Returns (K_last ``(B, T+1)``, I ``(n, B, T+1)``).
     """
+    return _dp_tables_batch(costs, T, backend=backend)
+
+
+def _backtrack_batch(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
+    """Unjitted body of :func:`backtrack_batch_jax` (see above)."""
 
     def step(t, irow):  # t: (B,), irow: (B, T+1)
         j = jnp.take_along_axis(irow, t[:, None].astype(jnp.int32), axis=1)[:, 0]
@@ -125,6 +126,16 @@ def backtrack_batch_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
 
     _, xs_rev = jax.lax.scan(step, t_star.astype(jnp.int32), I[::-1])
     return jnp.swapaxes(xs_rev[::-1], 0, 1)  # (B, n)
+
+
+@functools.partial(jax.jit, static_argnames=("T",))
+def backtrack_batch_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
+    """Batched reverse scan: per instance, x_i = I[i, b, t_b]; t_b -= x_i.
+
+    ``t_star`` is ``(B,)`` — each instance starts from its own filled
+    capacity, so ragged workloads coexist in one padded program.
+    """
+    return _backtrack_batch(I, t_star, T)
 
 
 def solve_schedule_dp_batch(problems, backend: str = "ref") -> np.ndarray:

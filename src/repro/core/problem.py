@@ -222,6 +222,39 @@ class ProblemBatch:
                 costs[b, i, len(tbl) :] = PACK_BIG
         return ProblemBatch(T=T, lower=lower, upper=upper, costs=costs)
 
+    def pad_to(self, B=None, n=None, W=None) -> "ProblemBatch":
+        """Embeds the batch in a larger ``(B, n, W)`` envelope (sweep-engine
+        shape bucketing, DESIGN.md §10).
+
+        Phantom instances get ``T = 0`` with all-phantom resources; phantom
+        resources get ``L = U = 0`` and cost table ``[0, BIG, ...]``; extra
+        table entries are BIG. All padding is therefore inert: the DP assigns
+        phantoms exactly 0 tasks at 0 cost and real rows/columns solve
+        bit-identically to the unpadded batch (argmin ties resolve to the
+        same ``j`` because BIG candidates never win and all-BIG ties pick
+        ``j = 0`` with or without padding).
+        """
+        B2 = self.B if B is None else int(B)
+        n2 = self.n if n is None else int(n)
+        W2 = self.W if W is None else int(W)
+        if (B2, n2, W2) == (self.B, self.n, self.W):
+            return self
+        if B2 < self.B or n2 < self.n or W2 < self.W:
+            raise ValueError(
+                f"pad_to target ({B2}, {n2}, {W2}) smaller than batch "
+                f"({self.B}, {self.n}, {self.W})"
+            )
+        T = np.zeros(B2, dtype=np.int64)
+        T[: self.B] = self.T
+        lower = np.zeros((B2, n2), dtype=np.int64)
+        lower[: self.B, : self.n] = self.lower
+        upper = np.zeros((B2, n2), dtype=np.int64)
+        upper[: self.B, : self.n] = self.upper
+        costs = np.full((B2, n2, W2), PACK_BIG, dtype=np.float64)
+        costs[:, :, 0] = 0.0  # phantoms: only x=0, at zero cost
+        costs[: self.B, : self.n, : self.W] = self.costs
+        return ProblemBatch(T=T, lower=lower, upper=upper, costs=costs)
+
     def instance(self, b: int) -> "Problem":
         """Materializes instance ``b`` as a standalone :class:`Problem`
         (padded resources are kept, as 0-task-only classes)."""

@@ -21,10 +21,11 @@ from typing import Callable, Dict
 import numpy as np
 
 from . import baselines
-from .jax_dp import solve_schedule_dp_batch, solve_schedule_dp_jax
+from .jax_dp import solve_schedule_dp_jax
 from .marginal import marco, mardec, mardecun, marin
 from .mc2mkp import solve_schedule_dp
 from .problem import Problem, total_cost, validate_schedule
+from .sweep import solve_dp_batch_cached
 
 __all__ = [
     "schedule",
@@ -83,21 +84,30 @@ def schedule_batch(
     problems,
     algorithm: str = "auto",
     check: bool = True,
-    backend: str = "ref",
+    backend=None,
+    engine=None,
 ):
     """Solves ``B`` instances, batching every DP solve into ONE jitted
-    min-plus program (DESIGN.md §9).
+    min-plus program (DESIGN.md §9) routed through the sweep engine's
+    shape-bucketed compile cache (§10).
 
     Dispatch mirrors :func:`schedule`:
       * ``algorithm="auto"``: each instance's regime is detected; instances
         with a marginal-algorithm regime (MarIn/MarCo/MarDec/MarDecUn — all
         Θ(n log n) or better, cheaper than any batching win) are solved
         per-instance, and the remaining arbitrary-regime instances are
-        stacked into one :func:`solve_schedule_dp_batch` call.
+        stacked into one batched DP call.
       * any DP algorithm name (``dp``, ``dp_jax``, ``dp_batch``,
         ``dp_jax_pallas``): ALL instances go through the batched DP
         (``dp_jax_pallas`` selects the Pallas kernel backend).
       * any other named algorithm: a plain per-instance loop.
+
+    ``engine``: an explicit :class:`~repro.core.sweep.SweepEngine` (e.g. a
+    sharded one); ``None`` uses the process-wide default for ``backend``
+    (``backend=None`` -> "ref"), so repeated shapes anywhere in the process
+    skip compilation. Requesting a backend that contradicts the given
+    engine's (e.g. ``dp_jax_pallas`` with a "ref" engine) raises ValueError
+    instead of silently running the engine's kernel.
 
     Returns a list of ``(n_b,)`` int64 schedules, one per input instance.
     """
@@ -121,7 +131,9 @@ def schedule_batch(
         for b, p in enumerate(problems):
             out[b] = schedule(p, algorithm, check=False)
     if dp_idx:
-        X = solve_schedule_dp_batch([problems[b] for b in dp_idx], backend=backend)
+        X = solve_dp_batch_cached(
+            [problems[b] for b in dp_idx], backend=backend, engine=engine
+        )
         for row, b in zip(X, dp_idx):
             out[b] = np.asarray(row[: problems[b].n], dtype=np.int64)
     if check:
@@ -194,15 +206,17 @@ def deadline_sweep(
     time_tables,
     deadlines,
     check: bool = True,
-    backend: str = "ref",
+    backend=None,
+    engine=None,
 ) -> np.ndarray:
     """Pareto-front builder: energy-minimal schedules for a whole grid of
     deadlines in ONE batched DP solve.
 
     Constructs the ``B`` deadline-tightened instances (same ``n`` and ``T``,
-    progressively looser ``U_i``) and stacks them through
-    :func:`solve_schedule_dp_batch`, so the entire epsilon-constraint sweep
-    costs one compilation + one kernel launch instead of ``B``.
+    progressively looser ``U_i``) and stacks them through the sweep engine
+    (``engine``, or the shared default for ``backend``), so the entire
+    epsilon-constraint sweep costs one kernel launch — and, once its shape
+    bucket is warm, zero compilations.
 
     Returns a ``(B, n)`` int64 array, row ``b`` optimal for ``deadlines[b]``.
     Raises ValueError (naming the offending deadline) if any point is
@@ -216,7 +230,7 @@ def deadline_sweep(
             tight.append(tighten_for_deadline(problem, time_tables, float(d)))
         except ValueError as e:
             raise ValueError(f"deadline_sweep point {d}: {e}") from e
-    X = solve_schedule_dp_batch(tight, backend=backend)[:, : problem.n]
+    X = solve_dp_batch_cached(tight, backend=backend, engine=engine)[:, : problem.n]
     if check:
         for p, x in zip(tight, X):
             validate_schedule(p, x)

@@ -1,0 +1,229 @@
+"""Sweep engine: shape-bucketed compile cache + device-sharded batches
+(DESIGN.md §10).
+
+The batched DP (§9) amortizes kernel launches across one sweep, but every
+new padded shape ``(B, n, T_max, W_max)`` still pays a fresh XLA compile
+(~4 s cold vs ~25 ms warm on CPU, see BENCH_batch.json). Production traffic
+— multi-round campaigns with drifting energy estimates, 100-point deadline
+sweeps, what-if grids — re-solves *near*-identical shapes constantly, so the
+engine:
+
+  1. **bucketizes** shapes: each of ``B``/``n``/``T_max``/``W_max`` is
+     rounded up to the next power of two, and the padded program for a
+     bucket is kept in an LRU of jitted callables. Any solve landing in a
+     warm bucket reuses the compiled executable — a campaign compiles once
+     on round 1 and never again. Padding is *inert* (phantom instances /
+     resources / BIG table entries; see :meth:`ProblemBatch.pad_to`), so
+     bucketed solves are bit-identical to uncached
+     :func:`~repro.core.jax_dp.solve_schedule_dp_batch`.
+  2. **shards** the batch axis: with a ``mesh``, inputs are placed with
+     ``jax.sharding.NamedSharding`` over ``B`` (rounded up to a multiple of
+     the axis size) and GSPMD partitions the scan batch-parallel — the DP
+     has no cross-instance dependence, so sharded schedules are also
+     bit-identical. Testable on CPU via
+     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``cache_stats()`` exposes hits/misses/compiles/evictions; ``compiles`` is
+counted by a trace-time side effect, so it reflects actual XLA tracings
+(one per bucket entry), not just cache misses.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .jax_dp import _backtrack_batch, _dp_tables_batch, pack_problem
+from .problem import ProblemBatch, remove_lower_limits, restore_lower_limits
+
+__all__ = [
+    "SweepEngine",
+    "bucket_shape",
+    "default_engine",
+    "make_sweep_mesh",
+    "reset_default_engines",
+    "solve_dp_batch_cached",
+]
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+def bucket_shape(B: int, n: int, T: int, W: int):
+    """The compile-cache bucket for an actual packed shape: every dim rounds
+    up to the next power of two. Worst-case padding is <2x per dim (~16x
+    FLOPs in the T*W-dominated DP), bought once per bucket; in exchange all
+    nearby shapes share one compiled executable."""
+    return (_next_pow2(B), _next_pow2(n), _next_pow2(T), _next_pow2(W))
+
+
+def make_sweep_mesh(axis: str = "sweep"):
+    """1-D mesh over ALL visible devices, for sharding sweep batches.
+
+    On CPU test hosts, force multiple devices *before* importing jax:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (same pattern as
+    tests/test_distribution.py — the flag binds at first jax init).
+    """
+    devices = jax.devices()
+    return jax.make_mesh((len(devices),), (axis,))
+
+
+class SweepEngine:
+    """Compile-cached, optionally device-sharded batched (MC)^2MKP solver.
+
+    Args:
+      backend: min-plus kernel backend ("ref" | "pallas" | "pallas_tpu"),
+        forwarded to :func:`~repro.kernels.ops.minplus_step_batch`.
+      max_entries: LRU capacity — distinct shape buckets kept warm.
+      mesh: optional ``jax.sharding.Mesh``; when set, the batch axis is
+        sharded over ``mesh_axis`` and ``B`` buckets round up to a multiple
+        of that axis size.
+      mesh_axis: mesh axis name to shard ``B`` over (default: the mesh's
+        first axis).
+    """
+
+    def __init__(
+        self,
+        backend: str = "ref",
+        max_entries: int = 64,
+        mesh=None,
+        mesh_axis: Optional[str] = None,
+    ):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.backend = backend
+        self.max_entries = int(max_entries)
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis or (mesh.axis_names[0] if mesh is not None else None)
+        self._ndev = int(mesh.shape[self.mesh_axis]) if mesh is not None else 1
+        self._cache: OrderedDict = OrderedDict()
+        self._hits = self._misses = self._compiles = self._evictions = 0
+
+    # ---- cache ---------------------------------------------------------
+
+    def cache_stats(self) -> dict:
+        """Counters since construction (or the last :meth:`clear`).
+        ``compiles`` counts actual jit tracings — with a warm cache it stays
+        flat no matter how many solves run."""
+        return {
+            "hits": self._hits,
+            "misses": self._misses,
+            "compiles": self._compiles,
+            "evictions": self._evictions,
+            "entries": len(self._cache),
+            "max_entries": self.max_entries,
+        }
+
+    def clear(self) -> None:
+        """Drops all cached executables and zeroes the counters."""
+        self._cache.clear()
+        self._hits = self._misses = self._compiles = self._evictions = 0
+
+    def _entry(self, key):
+        fn = self._cache.get(key)
+        if fn is not None:
+            self._hits += 1
+            self._cache.move_to_end(key)
+            return fn
+        self._misses += 1
+        fn = self._build(key)
+        self._cache[key] = fn
+        while len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+            self._evictions += 1
+        return fn
+
+    def _build(self, key):
+        _, _, Tb, _ = key
+        backend = self.backend
+
+        def run(costs, t_star):
+            # Trace-time side effect: executes once per XLA compilation of
+            # this entry (shapes are fixed per bucket, so exactly once
+            # unless the entry is evicted and rebuilt).
+            self._compiles += 1
+            _, I = _dp_tables_batch(costs, Tb, backend=backend)
+            return _backtrack_batch(I, t_star, Tb)
+
+        return jax.jit(run)
+
+    # ---- solving -------------------------------------------------------
+
+    def solve(self, problems) -> np.ndarray:
+        """Drop-in for :func:`~repro.core.jax_dp.solve_schedule_dp_batch`:
+        same inputs (sequence of :class:`Problem` or a prebuilt
+        :class:`ProblemBatch`), bit-identical ``(B, n)`` int64 schedules —
+        but warm buckets skip compilation entirely."""
+        batch = (
+            problems
+            if isinstance(problems, ProblemBatch)
+            else ProblemBatch.from_problems(problems)
+        )
+        batch.validate()
+        b0 = remove_lower_limits(batch)
+        Tmax = int(b0.T.max())
+        Bb, nb, Tb, Wb = bucket_shape(b0.B, b0.n, Tmax, b0.W)
+        if Bb % self._ndev:
+            Bb = ((Bb + self._ndev - 1) // self._ndev) * self._ndev
+        padded = b0.pad_to(B=Bb, n=nb, W=Wb)
+        costs = pack_problem(padded)  # (Bb, nb, Wb) float32, BIG-saturated
+        t_star = jnp.asarray(padded.T, dtype=jnp.int32)
+        if self.mesh is not None:
+            P = PartitionSpec
+            costs = jax.device_put(
+                costs, NamedSharding(self.mesh, P(self.mesh_axis, None, None))
+            )
+            t_star = jax.device_put(
+                t_star, NamedSharding(self.mesh, P(self.mesh_axis))
+            )
+        fn = self._entry((Bb, nb, Tb, Wb))
+        X0 = np.asarray(jax.device_get(fn(costs, t_star)))[: batch.B, : batch.n]
+        return restore_lower_limits(batch, X0.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default engines: schedule_batch / deadline_sweep / FL servers
+# all share these, so ANY repeated shape anywhere in the process is warm.
+# ---------------------------------------------------------------------------
+
+_DEFAULT_ENGINES: dict = {}
+
+
+def default_engine(backend: str = "ref") -> SweepEngine:
+    """The shared per-backend engine (created on first use)."""
+    eng = _DEFAULT_ENGINES.get(backend)
+    if eng is None:
+        eng = _DEFAULT_ENGINES[backend] = SweepEngine(backend=backend)
+    return eng
+
+
+def reset_default_engines() -> None:
+    """Drops the shared engines (test isolation)."""
+    _DEFAULT_ENGINES.clear()
+
+
+def solve_dp_batch_cached(
+    problems, backend: Optional[str] = None, engine=None
+) -> np.ndarray:
+    """Batched DP solve through a sweep engine (the given one, else the
+    shared default for ``backend``).
+
+    ``backend=None`` means "whatever the engine runs" (default engines:
+    "ref"). Naming BOTH an engine and a different backend is a contradiction
+    — the engine's executables are compiled for ITS backend — and raises
+    rather than silently running the wrong kernel.
+    """
+    if engine is not None:
+        if backend is not None and backend != engine.backend:
+            raise ValueError(
+                f"backend {backend!r} conflicts with engine.backend "
+                f"{engine.backend!r}; pass an engine built for that backend"
+            )
+        return engine.solve(problems)
+    return default_engine(backend or "ref").solve(problems)

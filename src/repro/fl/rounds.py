@@ -17,6 +17,11 @@ __all__ = ["CampaignHistory", "run_campaign"]
 class CampaignHistory:
     algorithm: str
     rounds: List[FLRoundResult]
+    # sweep-engine counter deltas over the campaign (DESIGN.md §10):
+    # hits/misses/compiles/evictions accrued by this campaign's DP solves.
+    # Round shapes repeat, so a healthy campaign shows compiles <= 1 after
+    # the first round warmed the bucket — see dp_compiles in summary().
+    dp_cache_stats: Optional[dict] = None
 
     @property
     def total_energy(self) -> float:
@@ -27,13 +32,17 @@ class CampaignHistory:
         return np.array([r.mean_loss for r in self.rounds])
 
     def summary(self) -> dict:
-        return {
+        out = {
             "algorithm": self.algorithm,
             "rounds": len(self.rounds),
             "total_energy_J": self.total_energy,
             "final_loss": float(self.rounds[-1].mean_loss) if self.rounds else float("nan"),
             "mean_makespan_J": float(np.mean([r.makespan_joules for r in self.rounds])) if self.rounds else 0.0,
         }
+        if self.dp_cache_stats is not None:
+            out["dp_compiles"] = self.dp_cache_stats["compiles"]
+            out["dp_cache_hits"] = self.dp_cache_stats["hits"]
+        return out
 
 
 def run_campaign(
@@ -47,10 +56,21 @@ def run_campaign(
     on_round: Optional[Callable[[FLRoundResult], None]] = None,
 ) -> CampaignHistory:
     """Runs ``num_rounds`` FedAvg rounds with ``round_T`` total mini-batches
-    scheduled across clients each round."""
+    scheduled across clients each round.
+
+    The history's ``dp_cache_stats`` records the counter deltas on the
+    SERVER'S sweep engine over the campaign: with warm (or repeating)
+    shapes this shows one compile at most — rounds 2+ are compile-free.
+    Caveat: a server left on the process-wide default engine shares those
+    counters with every other ``schedule_batch``/``deadline_sweep`` caller,
+    so concurrent solver traffic (including from an ``on_round`` callback)
+    lands in the delta too. Pass ``FederatedServer(engine=SweepEngine())``
+    when the accounting must isolate this campaign.
+    """
     server.round_T = round_T
     if max_steps is None:
         max_steps = max(d.max_batches for d in server.estimator.fleet)
+    before = server.engine.cache_stats()
     results = []
     for r in range(num_rounds):
         batches = lm_round_batches(examples_per_client, max_steps, batch_size, r)
@@ -58,4 +78,9 @@ def run_campaign(
         results.append(res)
         if on_round:
             on_round(res)
-    return CampaignHistory(algorithm=server.algorithm, rounds=results)
+    after = server.engine.cache_stats()
+    delta = {k: after[k] - before[k] for k in ("hits", "misses", "compiles", "evictions")}
+    delta["entries"] = after["entries"]
+    return CampaignHistory(
+        algorithm=server.algorithm, rounds=results, dp_cache_stats=delta
+    )

@@ -21,9 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.jax_dp import solve_schedule_dp_batch
 from ..core.problem import Problem, total_cost
 from ..core.scheduler import schedule
+from ..core.sweep import SweepEngine, default_engine
 from ..optim.optimizers import Optimizer
 from .client import make_client_fn
 from .energy import EnergyEstimator
@@ -80,6 +80,7 @@ class FederatedServer:
         round_T: Optional[int] = None,
         scenario_T_candidates: Optional[Sequence[int]] = None,
         scenario_dropouts: Optional[Sequence[Sequence[int]]] = None,
+        engine: Optional[SweepEngine] = None,
     ):
         """``round_T``: total mini-batches scheduled per round; ``None``
         defaults to half the round tensor's capacity (and can still be set
@@ -89,11 +90,18 @@ class FederatedServer:
         scenario-planning hook: alternative workloads and client-dropout
         subsets are evaluated against the CURRENT energy estimates via one
         batched DP solve and attached to each :class:`FLRoundResult`.
+
+        ``engine``: the :class:`~repro.core.sweep.SweepEngine` all batched
+        DP solves route through (``None``: the process-wide default). Round
+        shapes repeat while only the cost *values* drift, so round 1
+        compiles the DP and every later round reuses the warm executable
+        (inspect via ``server.engine.cache_stats()``).
         """
         self.params = init_params
         self.estimator = estimator
         self.algorithm = algorithm
         self.round_T = round_T
+        self.engine = engine if engine is not None else default_engine()
         self.scenario_T_candidates = list(scenario_T_candidates or ())
         self.scenario_dropouts = [tuple(s) for s in (scenario_dropouts or ())]
         self.n_clients = len(estimator.fleet)
@@ -186,7 +194,7 @@ class FederatedServer:
         for sub in self.scenario_dropouts:
             problems.append(apply_dropout(base, sub))
             labels.append("drop=" + ",".join(str(int(i)) for i in sorted(set(sub))))
-        X = solve_schedule_dp_batch(problems)[:, : self.n_clients]
+        X = self.engine.solve(problems)[:, : self.n_clients]
         energies = np.array(
             [total_cost(p, X[b]) for b, p in enumerate(problems)], dtype=np.float64
         )

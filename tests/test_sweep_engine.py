@@ -1,0 +1,312 @@
+"""Sweep engine (DESIGN.md §10): shape-bucketed compile cache + sharding.
+
+Claims under test:
+  * bucketed/padded cached solves are BIT-IDENTICAL to the uncached
+    :func:`solve_schedule_dp_batch` (padding is inert);
+  * a 3-round FL campaign with per-round scenario planning and drifting
+    energy estimates performs exactly ONE DP compilation;
+  * crossing a bucket boundary recompiles, staying inside one doesn't;
+  * the LRU evicts and honestly re-counts compiles on re-entry;
+  * sharding the batch axis over 8 forced host devices changes nothing
+    about the schedules (subprocess, same pattern as test_distribution.py).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Problem,
+    ProblemBatch,
+    SweepEngine,
+    bucket_shape,
+    deadline_sweep,
+    random_problem,
+    schedule_batch,
+    solve_schedule_dp,
+    solve_schedule_dp_batch,
+    total_cost,
+    validate_schedule,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REGIMES = ("arbitrary", "linear", "increasing", "decreasing")
+
+
+def random_mixed_problems(rng, B, max_n=6, max_T=24):
+    out = []
+    for b in range(B):
+        n = int(rng.integers(1, max_n + 1))
+        T = int(rng.integers(max(1, n), max_T + 1))
+        out.append(random_problem(rng, n=n, T=T, regime=REGIMES[b % len(REGIMES)]))
+    return out
+
+
+def drift(problems, factor):
+    """Same shapes, scaled costs — the round-over-round estimate drift that
+    must stay inside one bucket."""
+    return [
+        Problem(
+            T=p.T,
+            lower=p.lower,
+            upper=p.upper,
+            cost_tables=tuple(t * factor for t in p.cost_tables),
+        )
+        for p in problems
+    ]
+
+
+# ---------------------------------------------------------------------------
+# bucketing + padding
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_shape_pow2():
+    assert bucket_shape(1, 1, 1, 1) == (1, 1, 1, 1)
+    assert bucket_shape(3, 5, 17, 33) == (4, 8, 32, 64)
+    assert bucket_shape(8, 16, 32, 64) == (8, 16, 32, 64)  # pow2 is a fixpoint
+    assert bucket_shape(9, 16, 32, 64) == (16, 16, 32, 64)
+
+
+def test_problem_batch_pad_to_is_inert():
+    rng = np.random.default_rng(0)
+    probs = random_mixed_problems(rng, 5)
+    batch = ProblemBatch.from_problems(probs)
+    padded = batch.pad_to(B=8, n=8, W=batch.W + 5)
+    padded.validate()
+    assert (padded.B, padded.n, padded.W) == (8, 8, batch.W + 5)
+    # real region is untouched, phantoms solve to all-zero rows
+    np.testing.assert_array_equal(padded.costs[: batch.B, : batch.n, : batch.W], batch.costs)
+    X = solve_schedule_dp_batch(padded)
+    X_ref = solve_schedule_dp_batch(batch)
+    np.testing.assert_array_equal(X[: batch.B, : batch.n], X_ref)
+    assert np.all(X[batch.B :] == 0) and np.all(X[:, batch.n :] == 0)
+    # no-op and shrink behaviour
+    assert batch.pad_to() is batch
+    with pytest.raises(ValueError):
+        batch.pad_to(B=batch.B - 1)
+
+
+# ---------------------------------------------------------------------------
+# compile cache: exactness + counters
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_cached_solve_bit_identical_to_uncached(seed):
+    rng = np.random.default_rng(200 + seed)
+    probs = random_mixed_problems(rng, 9)
+    eng = SweepEngine()
+    X = eng.solve(probs)
+    np.testing.assert_array_equal(X, solve_schedule_dp_batch(probs))
+    assert eng.cache_stats()["compiles"] == 1
+    # drifted costs, same shapes: cache hit, still exact
+    probs2 = drift(probs, 1.07)
+    X2 = eng.solve(probs2)
+    np.testing.assert_array_equal(X2, solve_schedule_dp_batch(probs2))
+    s = eng.cache_stats()
+    assert s == {
+        "hits": 1,
+        "misses": 1,
+        "compiles": 1,
+        "evictions": 0,
+        "entries": 1,
+        "max_entries": eng.max_entries,
+    }
+    for p, x in zip(probs2, X2):
+        validate_schedule(p, x[: p.n])
+        assert total_cost(p, x[: p.n]) == pytest.approx(
+            total_cost(p, solve_schedule_dp(p)), rel=1e-5
+        )
+
+
+def test_bucket_boundary_crossing_recompiles():
+    rng = np.random.default_rng(3)
+    base = random_problem(rng, n=4, T=20, regime="arbitrary", with_lower=False)
+
+    def with_T(t):
+        return Problem(T=t, lower=base.lower, upper=base.upper, cost_tables=base.cost_tables)
+
+    eng = SweepEngine()
+    eng.solve([with_T(12), with_T(16)])  # T'max = 16 -> bucket T = 16
+    assert eng.cache_stats()["compiles"] == 1
+    eng.solve([with_T(9), with_T(14)])  # still inside the T=16 bucket
+    s = eng.cache_stats()
+    assert s["hits"] == 1 and s["compiles"] == 1 and s["entries"] == 1
+    eng.solve([with_T(12), with_T(17)])  # T'max = 17 -> bucket T = 32: recompile
+    s = eng.cache_stats()
+    assert s["compiles"] == 2 and s["misses"] == 2 and s["entries"] == 2
+
+
+def test_lru_eviction_and_recompile():
+    rng = np.random.default_rng(4)
+    small = [random_problem(rng, n=2, T=4, regime="linear") for _ in range(2)]
+    big = [random_problem(rng, n=6, T=20, regime="arbitrary") for _ in range(3)]
+    eng = SweepEngine(max_entries=1)
+    eng.solve(small)
+    eng.solve(big)  # different bucket: evicts `small`'s executable
+    s = eng.cache_stats()
+    assert s["evictions"] == 1 and s["entries"] == 1
+    X = eng.solve(small)  # re-enter the evicted bucket: honest recompile
+    s = eng.cache_stats()
+    assert s["compiles"] == 3 and s["hits"] == 0
+    np.testing.assert_array_equal(X, solve_schedule_dp_batch(small))
+    eng.clear()
+    assert eng.cache_stats()["compiles"] == 0 and eng.cache_stats()["entries"] == 0
+
+
+def test_schedule_batch_and_deadline_sweep_share_an_engine():
+    rng = np.random.default_rng(5)
+    probs = [random_problem(rng, n=4, T=15, regime="arbitrary") for _ in range(4)]
+    eng = SweepEngine()
+    xs = schedule_batch(probs, "dp_batch", engine=eng)
+    assert eng.cache_stats()["misses"] == 1
+    xs2 = schedule_batch(drift(probs, 1.02), "dp_batch", engine=eng)
+    s = eng.cache_stats()
+    assert s["hits"] == 1 and s["compiles"] == 1
+    for p, x, x2 in zip(probs, xs, xs2):
+        validate_schedule(p, x)
+        validate_schedule(p, x2)
+
+    # an explicit engine + a contradicting backend must raise, not silently
+    # run the engine's kernel (dp_jax_pallas promises the Pallas backend)
+    with pytest.raises(ValueError, match="conflicts with engine.backend"):
+        schedule_batch(probs, "dp_jax_pallas", engine=eng)
+
+    p = random_problem(rng, n=5, T=30, regime="increasing")
+    speeds = rng.uniform(0.5, 3.0, size=5)
+    times = [np.arange(int(u) + 1) / s for u, s in zip(p.upper, speeds)]
+    x_free = solve_schedule_dp(p)
+    d_max = max(float(times[i][int(x_free[i])]) for i in range(5))
+    deadlines = [d_max * f for f in (1.0, 1.5, 2.5, 10.0)]
+    eng2 = SweepEngine()
+    X1 = deadline_sweep(p, times, deadlines, engine=eng2)
+    X2 = deadline_sweep(p, times, deadlines, engine=eng2)  # warm re-sweep
+    np.testing.assert_array_equal(X1, X2)
+    s = eng2.cache_stats()
+    assert s["compiles"] == 1 and s["hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# FL: a 3-round campaign with scenario planning compiles the DP exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_three_round_campaign_compiles_dp_exactly_once():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import client_corpora, make_lm_examples
+    from repro.fl import EnergyEstimator, FederatedServer, make_fleet, run_campaign
+    from repro.optim import sgd
+
+    VOCAB, SEQ = 64, 8
+    rng = np.random.default_rng(0)
+    fleet = make_fleet(rng, 5, max_batches=8)
+    est = EnergyEstimator(fleet)
+    est.calibrate(rng)
+    corpora = client_corpora(rng, 5, 400, VOCAB)
+    examples = [make_lm_examples(c, SEQ) for c in corpora]
+
+    def loss_fn(params, batch):
+        x, y = batch[:, :-1], batch[:, 1:]
+        h = jnp.tanh(params["emb"][x])
+        logp = jax.nn.log_softmax(h @ params["out"])
+        return -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {
+        "emb": jax.random.normal(k1, (VOCAB, 16)) * 0.1,
+        "out": jax.random.normal(k2, (16, VOCAB)) * 0.1,
+    }
+    engine = SweepEngine()
+    cap = sum(d.max_batches for d in fleet)
+    server = FederatedServer(
+        loss_fn,
+        params,
+        sgd(0.3),
+        est,
+        round_T=cap // 2,
+        scenario_T_candidates=[cap // 3, cap // 2 + 2],
+        scenario_dropouts=[(0,), (1, 2)],
+        engine=engine,
+    )
+    hist = run_campaign(server, examples, num_rounds=3, round_T=cap // 2, batch_size=4, rng=rng)
+
+    assert len(hist.rounds) == 3
+    # energy estimates DRIFT between rounds (observe() feedback), but shapes
+    # repeat -> one bucket, one compilation, rounds 2-3 fully warm
+    stats = engine.cache_stats()
+    assert stats["compiles"] == 1, stats
+    assert stats["misses"] == 1 and stats["hits"] == 2, stats
+    assert hist.dp_cache_stats["compiles"] == 1
+    assert hist.summary()["dp_compiles"] == 1
+    for r in hist.rounds:
+        assert r.scenarios is not None
+        assert r.scenarios.assignments.shape == (4, 5)
+
+
+# ---------------------------------------------------------------------------
+# sharding: 8 host devices, bit-identical to single-device (subprocess —
+# XLA_FLAGS binds at first jax init, so the main test process can't force it)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_solve_matches_single_device_bit_identical():
+    src = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+        )
+        import sys
+        sys.path.insert(0, %r)
+        import numpy as np
+        import jax
+        from repro.core import (Problem, SweepEngine, make_sweep_mesh,
+                                random_problem, solve_schedule_dp_batch)
+
+        assert len(jax.devices()) == 8, jax.devices()
+        rng = np.random.default_rng(5)
+        regimes = ("arbitrary", "linear", "increasing", "decreasing")
+        probs = [
+            random_problem(rng, n=int(rng.integers(2, 6)), T=int(rng.integers(6, 20)),
+                           regime=regimes[b %% len(regimes)])
+            for b in range(5)  # B=5 -> pow2 bucket 8 == one row per device
+        ]
+        mesh = make_sweep_mesh()
+        assert mesh.devices.size == 8
+        eng_sh = SweepEngine(mesh=mesh)
+        X_sh = eng_sh.solve(probs)
+        X_1 = SweepEngine().solve(probs)
+        X_un = solve_schedule_dp_batch(probs)
+        assert np.array_equal(X_sh, X_1), "sharded != single-device"
+        assert np.array_equal(X_sh, X_un), "sharded != uncached"
+
+        # drifted re-solve stays warm AND sharded-exact
+        probs2 = [Problem(T=p.T, lower=p.lower, upper=p.upper,
+                          cost_tables=tuple(t * 1.03 for t in p.cost_tables))
+                  for p in probs]
+        X2 = eng_sh.solve(probs2)
+        assert np.array_equal(X2, solve_schedule_dp_batch(probs2))
+        s = eng_sh.cache_stats()
+        assert s["compiles"] == 1 and s["hits"] == 1, s
+
+        # B=3 exercises rounding the bucket up to a device-count multiple
+        X3 = eng_sh.solve(probs[:3])
+        assert np.array_equal(X3, solve_schedule_dp_batch(probs[:3]))
+        print("SHARDED_OK")
+        """
+        % os.path.join(REPO, "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", src], capture_output=True, text=True, timeout=420
+    )
+    assert proc.returncode == 0, (
+        f"subprocess failed:\nSTDOUT:{proc.stdout}\nSTDERR:{proc.stderr[-3000:]}"
+    )
+    assert "SHARDED_OK" in proc.stdout

@@ -1,0 +1,145 @@
+"""Async round pipeline benchmark (DESIGN.md §11): does the background
+planner actually hide scenario planning behind client training?
+
+One run answers three questions and writes ``BENCH_async.json``:
+
+  * **planner overlap fraction** (headline, CI floor >= 0.5 via
+    scripts/check_bench.py): the share of planning time (schedule solves +
+    what-if scenario batches) that the pipelined campaign kept OFF the round
+    hot path — 1.0 means the main thread never waited on the planner.
+  * **per-round wall-clock**, serial vs pipelined, and the campaign-level
+    ``speedup_pipelined_vs_serial``. Reported, not gated: on a small CPU box
+    the planner's XLA work competes with training for the same cores, so the
+    wall-clock win is bounded by the non-training fraction of the round and
+    swings with load.
+  * **bit-identicality**: the pipelined campaign's schedules, losses, and
+    energy accounting are asserted equal to the serial run (a crash here
+    fails the CI smoke).
+
+Run as::
+
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import time
+
+VOCAB, DIM, SEQ = 256, 64, 16
+
+
+def build_campaign(seed: int, n_clients: int, max_batches: int):
+    """A fresh (server, examples, rng, T) tuple; same seed => same campaign,
+    so serial and pipelined runs consume identical inputs."""
+    import jax
+    import numpy as np
+
+    from repro.data import client_corpora, make_lm_examples
+    from repro.fl import EnergyEstimator, FederatedServer, make_fleet
+    from repro.fl.toy import make_tiny_lm
+    from repro.optim import sgd
+
+    tiny_lm_init, tiny_lm_loss = make_tiny_lm(VOCAB, DIM)
+    rng = np.random.default_rng(seed)
+    fleet = make_fleet(rng, n_clients, max_batches=max_batches)
+    est = EnergyEstimator(fleet)
+    est.calibrate(rng)
+    corpora = client_corpora(rng, n_clients, 4000, VOCAB)
+    examples = [make_lm_examples(c, SEQ) for c in corpora]
+    T = sum(d.max_batches for d in fleet) // 2
+    server = FederatedServer(
+        loss_fn=tiny_lm_loss,
+        init_params=tiny_lm_init(jax.random.PRNGKey(1)),
+        client_optimizer=sgd(0.3),
+        estimator=est,
+        algorithm="auto",
+        scenario_T_candidates=[int(0.6 * T), int(0.8 * T), T, int(1.2 * T)],
+        scenario_dropouts=[[0], [1], [2], [3]],
+    )
+    return server, examples, rng, T
+
+
+def run_bench(rounds: int, n_clients: int = 12, max_batches: int = 48, batch_size: int = 8) -> dict:
+    import numpy as np
+
+    from repro.fl import AsyncCampaignRunner, run_campaign
+
+    # Warm-up campaign: warms the shared default engine's scenario-shape
+    # bucket (one XLA compile) so the timed runs measure steady-state
+    # planning, not first-contact compilation. Each timed server still pays
+    # its own round-program compile in round 0 — identically in both modes.
+    server, examples, rng, T = build_campaign(0, n_clients, max_batches)
+    run_campaign(server, examples, 2, round_T=T, batch_size=batch_size, rng=rng)
+
+    server, examples, rng, T = build_campaign(0, n_clients, max_batches)
+    t0 = time.perf_counter()
+    h_serial = run_campaign(
+        server, examples, rounds, round_T=T, batch_size=batch_size, rng=rng
+    )
+    serial_s = time.perf_counter() - t0
+
+    server, examples, rng, T = build_campaign(0, n_clients, max_batches)
+    t0 = time.perf_counter()
+    h_pipe = AsyncCampaignRunner(server).run(
+        examples, rounds, T, batch_size, rng
+    )
+    pipelined_s = time.perf_counter() - t0
+
+    # pipelining must never change the results (DESIGN.md §11)
+    np.testing.assert_array_equal(h_serial.losses, h_pipe.losses)
+    assert h_serial.total_energy == h_pipe.total_energy
+    for a, b in zip(h_serial.rounds, h_pipe.rounds):
+        np.testing.assert_array_equal(a.assignments, b.assignments)
+        np.testing.assert_array_equal(a.scenarios.assignments, b.scenarios.assignments)
+        np.testing.assert_array_equal(a.scenarios.energies, b.scenarios.energies)
+
+    ps, pp = h_serial.pipeline_stats, h_pipe.pipeline_stats
+    return {
+        "rounds": rounds,
+        "n_clients": n_clients,
+        "round_T": T,
+        "scenarios_per_round": len(h_pipe.rounds[0].scenarios.labels),
+        "serial_campaign_s": serial_s,
+        "pipelined_campaign_s": pipelined_s,
+        "speedup_pipelined_vs_serial": serial_s / pipelined_s,
+        "planner_overlap_fraction": pp.overlap_fraction,
+        "round_wall_mean_serial_s": float(np.mean(ps.round_wall_s)),
+        "round_wall_mean_pipelined_s": float(np.mean(pp.round_wall_s)),
+        "serial_pipeline": ps.as_dict(),
+        "pipelined_pipeline": pp.as_dict(),
+        "dp_cache": h_pipe.dp_cache_stats,
+    }
+
+
+def run():
+    """Harness entry point (benchmarks.run): small config, headline row."""
+    r = run_bench(rounds=4, n_clients=8, max_batches=32)
+    return [
+        (
+            f"async_pipeline_R{r['rounds']}_n{r['n_clients']}",
+            r["pipelined_campaign_s"] / r["rounds"] * 1e6,
+            f"overlap={r['planner_overlap_fraction']:.2f} "
+            f"speedup={r['speedup_pipelined_vs_serial']:.2f}x",
+        )
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small fast config for CI")
+    ap.add_argument("--out", default="BENCH_async.json")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=12)
+    args = ap.parse_args()
+
+    rounds = args.rounds or (4 if args.smoke else 6)
+    result = run_bench(rounds=rounds, n_clients=args.clients)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,29 +10,12 @@ import numpy as np
 
 from repro.data import client_corpora, make_lm_examples
 from repro.fl import EnergyEstimator, FederatedServer, make_fleet, run_campaign
+from repro.fl.toy import make_tiny_lm
 from repro.optim import sgd
 
 VOCAB, DIM, SEQ = 64, 16, 8
 
-
-def tiny_lm_init(key):
-    import jax.numpy as jnp
-
-    k1, k2 = jax.random.split(key)
-    return {
-        "emb": jax.random.normal(k1, (VOCAB, DIM)) * 0.1,
-        "out": jax.random.normal(k2, (DIM, VOCAB)) * 0.1,
-    }
-
-
-def tiny_lm_loss(params, batch):
-    import jax.numpy as jnp
-
-    x, y = batch[:, :-1], batch[:, 1:]
-    h = jnp.tanh(params["emb"][x])
-    logits = h @ params["out"]
-    logp = jax.nn.log_softmax(logits)
-    return -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
+tiny_lm_init, tiny_lm_loss = make_tiny_lm(VOCAB, DIM)
 
 
 def run(n_clients=8, rounds=5):

@@ -19,6 +19,12 @@ general policy over every benchmark JSON:
   * a missing baseline is fine (first run): the current numbers are
     reported as NEW and pass.
 
+``--markdown PATH`` additionally appends the trajectory tables as
+GitHub-flavored markdown — CI points this at ``$GITHUB_STEP_SUMMARY`` so
+every run publishes a bench-trajectory dashboard on the workflow summary
+page (and uploads the accumulated per-commit ``BENCH_*`` history as an
+artifact; see .github/workflows/ci.yml).
+
 Usage (what ci.sh runs)::
 
     python scripts/check_bench.py --baseline-dir .bench_baseline BENCH_*.json
@@ -42,6 +48,10 @@ TIME_SUFFIX = "_s"
 GATED = {
     "BENCH_batch.json": ("speedup_vs_loop",),
     "BENCH_sweep.json": ("speedup_cached_vs_cold",),
+    # speedup_pipelined_vs_serial is reported but NOT gated: on a loaded
+    # 2-core CI box the planner's XLA work contends with training and the
+    # ratio hovers near 1.0 — the stable promise is the overlap fraction.
+    "BENCH_async.json": ("planner_overlap_fraction",),
 }
 
 # Hard floors: benchmark file -> {metric: minimum}. These hold even on the
@@ -49,6 +59,9 @@ GATED = {
 FLOORS = {
     "BENCH_batch.json": {"speedup_vs_loop": 5.0},
     "BENCH_sweep.json": {"speedup_cached_vs_cold": 5.0},
+    # the async pipeline must hide at least half of all planning time
+    # behind client training (DESIGN.md §11; measured ~0.95+ on CPU)
+    "BENCH_async.json": {"planner_overlap_fraction": 0.5},
 }
 
 
@@ -70,9 +83,14 @@ def is_gated(name: str, key: str) -> bool:
     return key.rsplit(".", 1)[-1].startswith(RATIO_PREFIXES)
 
 
-def check_file(path: str, baseline_dir: str, tolerance: float) -> list:
-    """Returns a list of failure strings; prints the trajectory table."""
-    fails = []
+def check_file(path: str, baseline_dir: str, tolerance: float) -> tuple:
+    """Returns (failure strings, table rows); prints the trajectory table.
+
+    Rows are ``(metric, baseline_str, current_str, delta_str, status)`` —
+    the same content the console table shows, reused by the markdown
+    dashboard renderer.
+    """
+    fails, rows = [], []
     cur = flatten(json.load(open(path)))
     name = os.path.basename(path)
     base_path = os.path.join(baseline_dir, name)
@@ -99,6 +117,7 @@ def check_file(path: str, baseline_dir: str, tolerance: float) -> list:
             fails.append(f"{name}: {key} = {val:.2f} below hard floor {floor}")
         ref_s = f"{ref:.4g}" if ref is not None else "-"
         print(f"  {key:<32} {ref_s:>12} {val:>12.4g} {delta:>8}  {status}")
+        rows.append((key, ref_s, f"{val:.4g}", delta, status))
 
     # a gated metric that vanished (e.g. a benchmark leg silently skipped)
     # must not pass unnoticed
@@ -108,7 +127,37 @@ def check_file(path: str, baseline_dir: str, tolerance: float) -> list:
     for key in sorted(expected - set(cur)):
         fails.append(f"{name}: gated metric {key} missing from current output")
         print(f"  {key:<32} {'?':>12} {'MISSING':>12} {'':>8}  FAIL")
-    return fails
+        rows.append((key, "?", "MISSING", "", "FAIL"))
+    return fails, rows
+
+
+_STATUS_MD = {"ok": "✅ ok", "FAIL": "❌ FAIL", "info": "ℹ️ info"}
+
+
+def render_markdown(tables: dict, fails: list, tolerance: float) -> str:
+    """The bench-trajectory dashboard: one GFM table per benchmark file
+    (appended to ``$GITHUB_STEP_SUMMARY`` by CI)."""
+    out = ["## Bench trajectory", ""]
+    for name, (had_baseline, rows) in tables.items():
+        out.append(f"### {name}" + ("" if had_baseline else " *(NEW — no baseline)*"))
+        out.append("")
+        out.append("| metric | baseline | current | delta | status |")
+        out.append("|---|---:|---:|---:|---|")
+        for key, ref_s, val_s, delta, status in rows:
+            out.append(
+                f"| `{key}` | {ref_s} | {val_s} | {delta or '—'} "
+                f"| {_STATUS_MD.get(status, status)} |"
+            )
+        out.append("")
+    if fails:
+        out.append("**check_bench: FAIL**")
+        out.extend(f"- {f}" for f in fails)
+    else:
+        out.append(
+            f"**check_bench: OK** ({len(tables)} file(s), tolerance {tolerance:.0%})"
+        )
+    out.append("")
+    return "\n".join(out)
 
 
 def main() -> int:
@@ -121,6 +170,13 @@ def main() -> int:
         default=0.30,
         help="allowed fractional drop in ratio metrics vs baseline (default 0.30)",
     )
+    ap.add_argument(
+        "--markdown",
+        default=None,
+        metavar="PATH",
+        help="append the trajectory tables as GitHub-flavored markdown to "
+        "PATH (CI passes $GITHUB_STEP_SUMMARY)",
+    )
     args = ap.parse_args()
 
     files = args.files or sorted(
@@ -130,15 +186,23 @@ def main() -> int:
         print("check_bench: no BENCH_*.json files found — nothing to gate")
         return 1
 
-    fails = []
+    fails, tables = [], {}
     for path in files:
         if not os.path.exists(path):
             fails.append(f"{path}: benchmark output missing (did the smoke crash?)")
             continue
         try:
-            fails.extend(check_file(path, args.baseline_dir, args.tolerance))
+            name = os.path.basename(path)
+            had_baseline = os.path.exists(os.path.join(args.baseline_dir, name))
+            file_fails, rows = check_file(path, args.baseline_dir, args.tolerance)
+            fails.extend(file_fails)
+            tables[name] = (had_baseline, rows)
         except (json.JSONDecodeError, OSError) as e:
             fails.append(f"{path}: unreadable ({e})")
+
+    if args.markdown:
+        with open(args.markdown, "a") as f:
+            f.write(render_markdown(tables, fails, args.tolerance))
 
     print()
     if fails:

@@ -51,8 +51,15 @@ if ! python benchmarks/bench_sweep.py --smoke --out BENCH_sweep.json; then
   echo "ci.sh: FAIL — bench_sweep.py perf smoke crashed" >&2
   exit 1
 fi
+if ! python benchmarks/bench_async.py --smoke --out BENCH_async.json; then
+  echo "ci.sh: FAIL — bench_async.py perf smoke crashed" >&2
+  exit 1
+fi
 
-# 6. regression gate: ratio metrics vs baseline (30% tolerance) + hard floors
-python scripts/check_bench.py --baseline-dir .bench_baseline BENCH_*.json
+# 6. regression gate: ratio metrics vs baseline (30% tolerance) + hard
+#    floors. On GitHub Actions the trajectory tables are also appended to
+#    the step summary as a markdown dashboard.
+python scripts/check_bench.py --baseline-dir .bench_baseline \
+  ${GITHUB_STEP_SUMMARY:+--markdown "$GITHUB_STEP_SUMMARY"} BENCH_*.json
 
 echo "ci.sh: OK"

@@ -26,10 +26,20 @@ engine:
 ``cache_stats()`` exposes hits/misses/compiles/evictions; ``compiles`` is
 counted by a trace-time side effect, so it reflects actual XLA tracings
 (one per bucket entry), not just cache misses.
+
+The engine is thread-safe (cache and counters are lock-guarded) and, beyond
+the blocking :meth:`SweepEngine.solve`, offers :meth:`SweepEngine.dispatch`:
+the bucket executable is *launched* (JAX async dispatch, no
+``block_until_ready``) and a :class:`SweepHandle` materializes the schedule
+only when asked. The async round pipeline (DESIGN.md §11) gets its overlap
+from running whole solves on a background planner thread; the
+launch/materialize split here is the seam for callers that want to hold an
+in-flight solve across other work (e.g. deeper pipeline lookahead).
 """
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Optional
 
@@ -43,6 +53,7 @@ from .problem import ProblemBatch, remove_lower_limits, restore_lower_limits
 
 __all__ = [
     "SweepEngine",
+    "SweepHandle",
     "bucket_shape",
     "default_engine",
     "make_sweep_mesh",
@@ -72,6 +83,35 @@ def make_sweep_mesh(axis: str = "sweep"):
     """
     devices = jax.devices()
     return jax.make_mesh((len(devices),), (axis,))
+
+
+class SweepHandle:
+    """An in-flight batched solve: the bucket executable has been dispatched
+    (JAX async dispatch — no ``block_until_ready`` issued), but the schedule
+    is not yet on the host. :meth:`result` blocks on the device transfer,
+    unpads, and restores lower limits; repeated calls return the same array.
+    """
+
+    def __init__(self, raw, batch):
+        self._raw = raw  # (Bb, nb) device array, still possibly computing
+        self._batch = batch  # the ORIGINAL (unpadded) ProblemBatch
+        self._out: Optional[np.ndarray] = None
+
+    def done(self) -> bool:
+        """True once the device computation has finished (best-effort: jax
+        versions without ``Array.is_ready`` report False until
+        materialized)."""
+        if self._out is not None:
+            return True
+        is_ready = getattr(self._raw, "is_ready", None)
+        return bool(is_ready()) if callable(is_ready) else False
+
+    def result(self) -> np.ndarray:
+        """The ``(B, n)`` int64 schedules — blocks until the solve lands."""
+        if self._out is None:
+            X0 = np.asarray(jax.device_get(self._raw))[: self._batch.B, : self._batch.n]
+            self._out = restore_lower_limits(self._batch, X0.astype(np.int64))
+        return self._out
 
 
 class SweepEngine:
@@ -104,6 +144,9 @@ class SweepEngine:
         self._ndev = int(mesh.shape[self.mesh_axis]) if mesh is not None else 1
         self._cache: OrderedDict = OrderedDict()
         self._hits = self._misses = self._compiles = self._evictions = 0
+        # Guards cache + counters: solves may come from a background planner
+        # thread (fl/pipeline.py) concurrently with main-thread callers.
+        self._lock = threading.Lock()
 
     # ---- cache ---------------------------------------------------------
 
@@ -111,33 +154,36 @@ class SweepEngine:
         """Counters since construction (or the last :meth:`clear`).
         ``compiles`` counts actual jit tracings — with a warm cache it stays
         flat no matter how many solves run."""
-        return {
-            "hits": self._hits,
-            "misses": self._misses,
-            "compiles": self._compiles,
-            "evictions": self._evictions,
-            "entries": len(self._cache),
-            "max_entries": self.max_entries,
-        }
+        with self._lock:
+            return {
+                "hits": self._hits,
+                "misses": self._misses,
+                "compiles": self._compiles,
+                "evictions": self._evictions,
+                "entries": len(self._cache),
+                "max_entries": self.max_entries,
+            }
 
     def clear(self) -> None:
         """Drops all cached executables and zeroes the counters."""
-        self._cache.clear()
-        self._hits = self._misses = self._compiles = self._evictions = 0
+        with self._lock:
+            self._cache.clear()
+            self._hits = self._misses = self._compiles = self._evictions = 0
 
     def _entry(self, key):
-        fn = self._cache.get(key)
-        if fn is not None:
-            self._hits += 1
-            self._cache.move_to_end(key)
+        with self._lock:
+            fn = self._cache.get(key)
+            if fn is not None:
+                self._hits += 1
+                self._cache.move_to_end(key)
+                return fn
+            self._misses += 1
+            fn = self._build(key)
+            self._cache[key] = fn
+            while len(self._cache) > self.max_entries:
+                self._cache.popitem(last=False)
+                self._evictions += 1
             return fn
-        self._misses += 1
-        fn = self._build(key)
-        self._cache[key] = fn
-        while len(self._cache) > self.max_entries:
-            self._cache.popitem(last=False)
-            self._evictions += 1
-        return fn
 
     def _build(self, key):
         _, _, Tb, _ = key
@@ -147,7 +193,8 @@ class SweepEngine:
             # Trace-time side effect: executes once per XLA compilation of
             # this entry (shapes are fixed per bucket, so exactly once
             # unless the entry is evicted and rebuilt).
-            self._compiles += 1
+            with self._lock:
+                self._compiles += 1
             _, I = _dp_tables_batch(costs, Tb, backend=backend)
             return _backtrack_batch(I, t_star, Tb)
 
@@ -155,11 +202,14 @@ class SweepEngine:
 
     # ---- solving -------------------------------------------------------
 
-    def solve(self, problems) -> np.ndarray:
-        """Drop-in for :func:`~repro.core.jax_dp.solve_schedule_dp_batch`:
-        same inputs (sequence of :class:`Problem` or a prebuilt
-        :class:`ProblemBatch`), bit-identical ``(B, n)`` int64 schedules —
-        but warm buckets skip compilation entirely."""
+    def dispatch(self, problems) -> SweepHandle:
+        """Launches the batched solve WITHOUT materializing the result.
+
+        Packing/padding happens eagerly (cheap numpy), the bucket executable
+        is invoked once — JAX async dispatch returns immediately with the
+        computation in flight — and the returned :class:`SweepHandle` does
+        the blocking ``device_get`` only on :meth:`SweepHandle.result`, so
+        a caller can keep working while the solve computes."""
         batch = (
             problems
             if isinstance(problems, ProblemBatch)
@@ -183,8 +233,14 @@ class SweepEngine:
                 t_star, NamedSharding(self.mesh, P(self.mesh_axis))
             )
         fn = self._entry((Bb, nb, Tb, Wb))
-        X0 = np.asarray(jax.device_get(fn(costs, t_star)))[: batch.B, : batch.n]
-        return restore_lower_limits(batch, X0.astype(np.int64))
+        return SweepHandle(fn(costs, t_star), batch)
+
+    def solve(self, problems) -> np.ndarray:
+        """Drop-in for :func:`~repro.core.jax_dp.solve_schedule_dp_batch`:
+        same inputs (sequence of :class:`Problem` or a prebuilt
+        :class:`ProblemBatch`), bit-identical ``(B, n)`` int64 schedules —
+        but warm buckets skip compilation entirely."""
+        return self.dispatch(problems).result()
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,27 @@
 from .client import local_train, make_client_fn
 from .energy import DeviceProfile, EnergyEstimator, make_fleet
-from .rounds import CampaignHistory, run_campaign
-from .server import FederatedServer, FLRoundResult, ScenarioReport, apply_dropout
+from .pipeline import (
+    AsyncCampaignRunner,
+    CampaignHistory,
+    CampaignRunner,
+    PipelineStats,
+    PlanFuture,
+    SerialPlanExecutor,
+    ThreadPlanExecutor,
+)
+from .rounds import run_campaign
+from .server import (
+    FederatedServer,
+    FLRoundResult,
+    RoundPlan,
+    ScenarioReport,
+    apply_dropout,
+)
 
 __all__ = [
     "local_train", "make_client_fn", "DeviceProfile", "EnergyEstimator",
-    "make_fleet", "FederatedServer", "FLRoundResult", "ScenarioReport",
-    "apply_dropout", "CampaignHistory", "run_campaign",
+    "make_fleet", "FederatedServer", "FLRoundResult", "RoundPlan",
+    "ScenarioReport", "apply_dropout", "CampaignHistory", "run_campaign",
+    "AsyncCampaignRunner", "CampaignRunner", "PipelineStats", "PlanFuture",
+    "SerialPlanExecutor", "ThreadPlanExecutor",
 ]

@@ -1,0 +1,359 @@
+"""Async round pipeline: overlap client training with next-round planning.
+
+The campaign loop (DESIGN.md §11) is ONE code path over the server's round
+stages (``plan -> train -> aggregate``; see fl/server.py), parameterized by
+a *plan executor* that decides WHERE planning tasks run:
+
+  * :class:`SerialPlanExecutor` — every task runs inline at submit time; the
+    reference semantics (identical to the pre-pipeline serial driver).
+  * :class:`ThreadPlanExecutor` — a single background planner thread drains
+    tasks in FIFO submission order. While round *r*'s clients train inside
+    the jitted SPMD program, the planner is already solving round *r*'s
+    what-if scenario batch and round *r+1*'s schedule through the shared
+    :class:`~repro.core.sweep.SweepEngine` (via its non-blocking
+    ``dispatch``), so no DP solve ever issues a ``block_until_ready`` on the
+    round hot path.
+
+Every task is handed back as a :class:`PlanFuture`; results materialize only
+when the next round actually needs them (``PlanFuture.result()``).
+
+**Why results are bit-identical across executors.** Planning tasks are pure
+functions of immutable snapshots: the campaign loop builds every
+:class:`~repro.core.problem.Problem` on the main thread (after that round's
+``account_round`` folded measurements into the estimator) and submits only
+the deterministic solve. The random stream and estimator mutations live
+exclusively in ``account_round``, which always runs on the main thread in
+round order. So serial and pipelined campaigns consume identical inputs in
+identical order — the executors differ only in wall-clock interleaving, and
+``tests/test_fl_pipeline.py`` asserts schedules, losses, and energy match
+bit-for-bit.
+
+Overlap accounting: each PlanFuture records the planner time it consumed
+(``busy_s``) and the main-thread time spent blocked in ``result()``
+(``blocked_s``). The campaign's ``overlap_fraction`` is the share of
+planning time hidden off the hot path — 0.0 by construction for the serial
+executor, → 1.0 when training fully hides planning. ``benchmarks/
+bench_async.py`` gates this at >= 0.5 on CPU via scripts/check_bench.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from ..data.pipeline import lm_round_batches
+from .server import FederatedServer, FLRoundResult
+
+__all__ = [
+    "AsyncCampaignRunner",
+    "CampaignHistory",
+    "CampaignRunner",
+    "PipelineStats",
+    "PlanFuture",
+    "SerialPlanExecutor",
+    "ThreadPlanExecutor",
+]
+
+
+# ---------------------------------------------------------------------------
+# plan futures + executors
+# ---------------------------------------------------------------------------
+
+
+class PlanFuture:
+    """Handle to one planning task (a schedule solve, a scenario batch).
+
+    ``result()`` blocks until the task finished (re-raising any planner
+    exception) and records how long the caller waited — the pipeline's
+    overlap accounting. ``busy_s`` is the executor time the task consumed.
+    """
+
+    def __init__(self, label: str):
+        self.label = label
+        self.busy_s = 0.0  # executor time spent computing this task
+        self.blocked_s = 0.0  # caller time spent blocked in result()
+        self._event = threading.Event()
+        self._value = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def _run(self, fn: Callable, args: tuple) -> None:
+        t0 = time.perf_counter()
+        try:
+            self._value = fn(*args)
+        except BaseException as e:  # surfaced at result() — see crash test
+            self._exc = e
+        finally:
+            self.busy_s = time.perf_counter() - t0
+            self._event.set()
+
+    def result(self):
+        """Materializes the task's value, blocking if still in flight."""
+        if not self._event.is_set():
+            t0 = time.perf_counter()
+            self._event.wait()
+            self.blocked_s += time.perf_counter() - t0
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+class SerialPlanExecutor:
+    """Runs every planning task inline at submit time (reference path).
+
+    Inline tasks sit fully on the hot path, so their entire ``busy_s``
+    counts as blocked — the serial overlap fraction is exactly 0.
+    """
+
+    mode = "serial"
+
+    def submit(self, label: str, fn: Callable, *args) -> PlanFuture:
+        f = PlanFuture(label)
+        f._run(fn, args)
+        f.blocked_s = f.busy_s
+        return f
+
+    def shutdown(self) -> None:
+        pass
+
+
+class ThreadPlanExecutor:
+    """Single background planner thread, FIFO task order.
+
+    One thread (not a pool): tasks execute in exactly the submission order —
+    the same order the serial executor runs them — which keeps estimator
+    snapshots/solves sequenced identically and the engine's compile-cache
+    accounting race-free.
+    """
+
+    mode = "pipelined"
+
+    def __init__(self, name: str = "fl-planner"):
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
+        self._thread.start()
+
+    def submit(self, label: str, fn: Callable, *args) -> PlanFuture:
+        f = PlanFuture(label)
+        self._q.put((f, fn, args))
+        return f
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            f, fn, args = item
+            f._run(fn, args)
+
+    def shutdown(self) -> None:
+        """Drains queued tasks, then joins the planner thread."""
+        self._q.put(None)
+        self._thread.join()
+
+
+_EXECUTORS = {"serial": SerialPlanExecutor, "pipelined": ThreadPlanExecutor}
+
+
+# ---------------------------------------------------------------------------
+# campaign history + pipeline stats
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    """Where the campaign's time went, per executor mode.
+
+    ``overlap_fraction`` = share of planning time hidden off the round hot
+    path: 1 - blocked/busy (0.0 for serial by construction).
+    """
+
+    mode: str
+    round_wall_s: List[float] = dataclasses.field(default_factory=list)
+    planner_busy_s: float = 0.0
+    planner_blocked_s: float = 0.0
+    train_block_s: float = 0.0  # main-thread time blocked materializing losses
+    tasks: List[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def overlap_fraction(self) -> float:
+        if self.planner_busy_s <= 0.0:
+            return 1.0 if self.mode == "pipelined" else 0.0
+        frac = 1.0 - self.planner_blocked_s / self.planner_busy_s
+        return float(min(1.0, max(0.0, frac)))
+
+    def as_dict(self) -> dict:
+        return {
+            "mode": self.mode,
+            "rounds": len(self.round_wall_s),
+            "round_wall_s": list(self.round_wall_s),
+            "round_wall_mean_s": float(np.mean(self.round_wall_s)) if self.round_wall_s else 0.0,
+            "planner_busy_s": self.planner_busy_s,
+            "planner_blocked_s": self.planner_blocked_s,
+            "train_block_s": self.train_block_s,
+            "overlap_fraction": self.overlap_fraction,
+        }
+
+
+@dataclasses.dataclass
+class CampaignHistory:
+    algorithm: str
+    rounds: List[FLRoundResult]
+    # sweep-engine counter deltas over the campaign (DESIGN.md §10):
+    # hits/misses/compiles/evictions accrued by this campaign's DP solves.
+    # Round shapes repeat, so a healthy campaign shows compiles <= 1 after
+    # the first round warmed the bucket — see dp_compiles in summary().
+    dp_cache_stats: Optional[dict] = None
+    # executor timing (DESIGN.md §11): how much planning the pipeline hid.
+    pipeline_stats: Optional[PipelineStats] = None
+
+    @property
+    def total_energy(self) -> float:
+        return float(sum(r.energy_joules for r in self.rounds))
+
+    @property
+    def losses(self) -> np.ndarray:
+        return np.array([r.mean_loss for r in self.rounds])
+
+    def summary(self) -> dict:
+        out = {
+            "algorithm": self.algorithm,
+            "rounds": len(self.rounds),
+            "total_energy_J": self.total_energy,
+            "final_loss": float(self.rounds[-1].mean_loss) if self.rounds else float("nan"),
+            "mean_makespan_J": float(np.mean([r.makespan_joules for r in self.rounds])) if self.rounds else 0.0,
+        }
+        if self.dp_cache_stats is not None:
+            out["dp_compiles"] = self.dp_cache_stats["compiles"]
+            out["dp_cache_hits"] = self.dp_cache_stats["hits"]
+        if self.pipeline_stats is not None:
+            out["pipeline_mode"] = self.pipeline_stats.mode
+            out["planner_overlap_fraction"] = self.pipeline_stats.overlap_fraction
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the (single) campaign loop
+# ---------------------------------------------------------------------------
+
+
+class CampaignRunner:
+    """Multi-round FedAvg campaign driver over the server's round stages.
+
+    ``mode`` picks the plan executor: "serial" (inline planning — the
+    reference semantics) or "pipelined" (background planner thread). A fresh
+    executor is created per :meth:`run` and always shut down — a planner
+    exception drains the thread before re-raising in the caller.
+    """
+
+    def __init__(self, server: FederatedServer, mode: str = "serial"):
+        if mode not in _EXECUTORS:
+            raise ValueError(f"unknown pipeline mode {mode!r}; options: {sorted(_EXECUTORS)}")
+        self.server = server
+        self.mode = mode
+
+    def run(
+        self,
+        examples_per_client: list,
+        num_rounds: int,
+        round_T: int,
+        batch_size: int,
+        rng: np.random.Generator,
+        max_steps: Optional[int] = None,
+        on_round: Optional[Callable[[FLRoundResult], None]] = None,
+    ) -> CampaignHistory:
+        server = self.server
+        server.round_T = round_T
+        if max_steps is None:
+            max_steps = max(d.max_batches for d in server.estimator.fleet)
+        stats = PipelineStats(mode=self.mode)
+        executor = _EXECUTORS[self.mode]()
+        futures: List[PlanFuture] = []
+
+        def submit(label, fn, *args):
+            f = executor.submit(label, fn, *args)
+            futures.append(f)
+            return f
+
+        before = server.engine.cache_stats()
+        results: List[FLRoundResult] = []
+        try:
+            if num_rounds > 0:
+                # Round 0's plan has nothing to hide behind — submitted
+                # eagerly so the pipelined path still has one entry point.
+                plan_f = submit(
+                    "plan[0]", server.plan_round, 0, round_T, server.build_problem(round_T)
+                )
+            for r in range(num_rounds):
+                t_round = time.perf_counter()
+                batches = lm_round_batches(examples_per_client, max_steps, batch_size, r)
+                plan = plan_f.result()
+                mean_loss = server.train_round(plan, batches)  # async dispatch
+                # CPU-side accounting runs while the device trains; it is
+                # the only stage touching rng/estimator state (see server).
+                acct = server.account_round(plan, rng)
+                # Snapshot next-round planning NOW (post-accounting), hand
+                # the solves to the executor, materialize only when needed.
+                scen_problems, scen_labels = server.build_scenarios(plan.T)
+                scen_f = submit(
+                    f"scenarios[{r}]", server.solve_scenarios, scen_problems, scen_labels
+                )
+                if r + 1 < num_rounds:
+                    plan_f = submit(
+                        f"plan[{r + 1}]",
+                        server.plan_round,
+                        r + 1,
+                        round_T,
+                        server.build_problem(round_T),
+                    )
+                t0 = time.perf_counter()
+                loss = float(mean_loss)  # blocks until clients finish
+                stats.train_block_s += time.perf_counter() - t0
+                res = FLRoundResult(
+                    round_index=r,
+                    assignments=plan.assignments,
+                    mean_loss=loss,
+                    energy_joules=acct["energy_joules"],
+                    estimated_joules=plan.est_cost,
+                    makespan_joules=acct["makespan_joules"],
+                    scenarios=scen_f.result(),
+                )
+                results.append(res)
+                stats.round_wall_s.append(time.perf_counter() - t_round)
+                if on_round:
+                    on_round(res)
+        finally:
+            executor.shutdown()
+        after = server.engine.cache_stats()
+
+        stats.planner_busy_s = float(sum(f.busy_s for f in futures))
+        stats.planner_blocked_s = float(sum(f.blocked_s for f in futures))
+        stats.tasks = [
+            {"label": f.label, "busy_s": f.busy_s, "blocked_s": f.blocked_s}
+            for f in futures
+        ]
+        delta = {k: after[k] - before[k] for k in ("hits", "misses", "compiles", "evictions")}
+        delta["entries"] = after["entries"]
+        return CampaignHistory(
+            algorithm=server.algorithm,
+            rounds=results,
+            dp_cache_stats=delta,
+            pipeline_stats=stats,
+        )
+
+
+class AsyncCampaignRunner(CampaignRunner):
+    """Campaign driver with the background planner thread pre-selected:
+    round *r+1*'s schedule and scenario solves overlap round *r*'s client
+    training, with results bit-identical to :class:`CampaignRunner` in
+    serial mode."""
+
+    def __init__(self, server: FederatedServer):
+        super().__init__(server, mode="pipelined")

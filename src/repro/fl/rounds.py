@@ -1,48 +1,22 @@
-"""FL campaign driver: multi-round orchestration + energy accounting."""
+"""FL campaign driver: multi-round orchestration + energy accounting.
+
+The loop itself lives in :mod:`repro.fl.pipeline` (DESIGN.md §11) — ONE
+code path over the server's ``plan -> train -> aggregate`` stages, run
+either serially or with a background planner thread that overlaps round
+*r*'s client training with round *r+1*'s scenario planning. This module
+keeps the stable entry point: :func:`run_campaign`.
+"""
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-from ..data.pipeline import lm_round_batches
+from .pipeline import CampaignHistory, CampaignRunner
 from .server import FederatedServer, FLRoundResult
 
 __all__ = ["CampaignHistory", "run_campaign"]
-
-
-@dataclasses.dataclass
-class CampaignHistory:
-    algorithm: str
-    rounds: List[FLRoundResult]
-    # sweep-engine counter deltas over the campaign (DESIGN.md §10):
-    # hits/misses/compiles/evictions accrued by this campaign's DP solves.
-    # Round shapes repeat, so a healthy campaign shows compiles <= 1 after
-    # the first round warmed the bucket — see dp_compiles in summary().
-    dp_cache_stats: Optional[dict] = None
-
-    @property
-    def total_energy(self) -> float:
-        return float(sum(r.energy_joules for r in self.rounds))
-
-    @property
-    def losses(self) -> np.ndarray:
-        return np.array([r.mean_loss for r in self.rounds])
-
-    def summary(self) -> dict:
-        out = {
-            "algorithm": self.algorithm,
-            "rounds": len(self.rounds),
-            "total_energy_J": self.total_energy,
-            "final_loss": float(self.rounds[-1].mean_loss) if self.rounds else float("nan"),
-            "mean_makespan_J": float(np.mean([r.makespan_joules for r in self.rounds])) if self.rounds else 0.0,
-        }
-        if self.dp_cache_stats is not None:
-            out["dp_compiles"] = self.dp_cache_stats["compiles"]
-            out["dp_cache_hits"] = self.dp_cache_stats["hits"]
-        return out
 
 
 def run_campaign(
@@ -54,9 +28,17 @@ def run_campaign(
     rng: np.random.Generator,
     max_steps: Optional[int] = None,
     on_round: Optional[Callable[[FLRoundResult], None]] = None,
+    pipelined: bool = False,
 ) -> CampaignHistory:
     """Runs ``num_rounds`` FedAvg rounds with ``round_T`` total mini-batches
     scheduled across clients each round.
+
+    ``pipelined=False`` plans inline (the reference path); ``pipelined=True``
+    moves every DP solve onto a background planner thread that overlaps with
+    client training — schedules, losses, and energy accounting are
+    bit-identical either way (asserted in tests/test_fl_pipeline.py), only
+    the wall-clock interleaving changes. The history's ``pipeline_stats``
+    reports how much planning time the pipeline hid (``overlap_fraction``).
 
     The history's ``dp_cache_stats`` records the counter deltas on the
     SERVER'S sweep engine over the campaign: with warm (or repeating)
@@ -67,20 +49,13 @@ def run_campaign(
     lands in the delta too. Pass ``FederatedServer(engine=SweepEngine())``
     when the accounting must isolate this campaign.
     """
-    server.round_T = round_T
-    if max_steps is None:
-        max_steps = max(d.max_batches for d in server.estimator.fleet)
-    before = server.engine.cache_stats()
-    results = []
-    for r in range(num_rounds):
-        batches = lm_round_batches(examples_per_client, max_steps, batch_size, r)
-        res = server.run_round(r, batches, rng)
-        results.append(res)
-        if on_round:
-            on_round(res)
-    after = server.engine.cache_stats()
-    delta = {k: after[k] - before[k] for k in ("hits", "misses", "compiles", "evictions")}
-    delta["entries"] = after["entries"]
-    return CampaignHistory(
-        algorithm=server.algorithm, rounds=results, dp_cache_stats=delta
+    runner = CampaignRunner(server, mode="pipelined" if pipelined else "serial")
+    return runner.run(
+        examples_per_client,
+        num_rounds,
+        round_T,
+        batch_size,
+        rng,
+        max_steps=max_steps,
+        on_round=on_round,
     )

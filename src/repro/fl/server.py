@@ -10,6 +10,25 @@ Per round (McMahan et al. [1] + this paper's contribution):
      clients with ``x_i = 0`` contribute nothing.
   4. The simulator charges each device its TRUE energy for ``x_i`` batches
      (with measurement noise fed back to the estimator).
+
+A round is decomposed into explicit stages (DESIGN.md §11) so serial and
+pipelined campaign executors share one code path:
+
+  * :meth:`FederatedServer.build_problem` / :meth:`~FederatedServer.plan_round`
+    — snapshot the estimator into a :class:`~repro.core.problem.Problem` and
+    solve the schedule (a :class:`RoundPlan`).
+  * :meth:`FederatedServer.train_round` — dispatch the jitted SPMD round
+    program; returns the UN-materialized device loss (JAX async dispatch),
+    so the caller decides when to block.
+  * :meth:`FederatedServer.account_round` — pure-CPU energy accounting +
+    estimator feedback (the only stage that mutates estimator state / rng).
+  * :meth:`FederatedServer.build_scenarios` /
+    :meth:`~FederatedServer.solve_scenarios` — what-if snapshot (cheap, must
+    run after accounting) split from the batched DP solve (expensive, safe
+    to run on a background planner thread).
+
+:meth:`FederatedServer.run_round` composes the stages serially and is the
+reference semantics the async pipeline must reproduce bit-identically.
 """
 
 from __future__ import annotations
@@ -28,7 +47,24 @@ from ..optim.optimizers import Optimizer
 from .client import make_client_fn
 from .energy import EnergyEstimator
 
-__all__ = ["FLRoundResult", "ScenarioReport", "FederatedServer", "apply_dropout"]
+__all__ = [
+    "FLRoundResult",
+    "RoundPlan",
+    "ScenarioReport",
+    "FederatedServer",
+    "apply_dropout",
+]
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """Output of the planning stage: the schedule for one round plus what the
+    scheduler believed it would cost (on the estimates it planned against)."""
+
+    round_index: int
+    T: int  # requested workload (pre-dropout-clipping)
+    assignments: np.ndarray  # x_i, sums to the effective workload
+    est_cost: float  # estimated Joules under the planning-time tables
 
 
 @dataclasses.dataclass
@@ -128,6 +164,98 @@ class FederatedServer:
 
         self._round_fn = jax.jit(round_fn)
 
+    # ---- round stages (plan -> train -> aggregate/account) -------------
+
+    def build_problem(self, T: int, unavailable=None) -> Problem:
+        """Snapshot stage: the scheduling instance for workload ``T`` under
+        the CURRENT estimates (cheap numpy — safe to run on the round hot
+        path; the returned Problem is immutable, so a background solver can
+        consume it while the estimator keeps drifting)."""
+        est_problem = self.estimator.problem(T)
+        if unavailable:
+            est_problem = apply_dropout(est_problem, unavailable)
+        return est_problem
+
+    def plan_round(
+        self, round_index: int, T: int, est_problem: Optional[Problem] = None
+    ) -> RoundPlan:
+        """Planning stage: solve the schedule for ``est_problem`` (built via
+        :meth:`build_problem` if not given). Deterministic in its inputs —
+        running it inline or on a planner thread yields the same plan."""
+        if est_problem is None:
+            est_problem = self.build_problem(T)
+        x = schedule(est_problem, self.algorithm)
+        return RoundPlan(
+            round_index=round_index,
+            T=int(T),
+            assignments=np.asarray(x),
+            est_cost=float(total_cost(est_problem, x)),
+        )
+
+    def train_round(self, plan: RoundPlan, batches) -> jnp.ndarray:
+        """Training stage: dispatches the jitted SPMD round program and
+        updates ``self.params``. Returns the data-weighted mean loss as an
+        UN-materialized device array (JAX async dispatch) — call ``float()``
+        on it only when the value is actually needed, so planning work can
+        proceed while clients train."""
+        num_steps = jnp.asarray(plan.assignments, dtype=jnp.int32)
+        self.params, mean_loss = self._round_fn(
+            self.params, jnp.asarray(batches), num_steps
+        )
+        return mean_loss
+
+    def account_round(self, plan: RoundPlan, rng: np.random.Generator) -> dict:
+        """Accounting stage: charge each device its TRUE energy and feed
+        noisy measurements back into the estimator. Pure CPU, and the ONLY
+        stage consuming ``rng`` / mutating estimator state — so stage order
+        fixes the random stream and serial vs pipelined campaigns stay
+        bit-identical."""
+        x = plan.assignments
+        true_problem = self.estimator.true_problem(plan.T)
+        true_cost = total_cost(true_problem, x)
+        per_dev = [true_problem.cost(i, int(x[i])) for i in range(self.n_clients)]
+        for i, dev in enumerate(self.estimator.fleet):
+            if x[i] > 0:
+                self.estimator.observe(i, int(x[i]), dev.measure(int(x[i]), rng))
+        return {
+            "energy_joules": float(true_cost),
+            "makespan_joules": float(max(per_dev)),
+        }
+
+    def build_scenarios(self, T: int):
+        """What-if snapshot (cheap): the configured candidate workloads and
+        dropout subsets as concrete Problems under the current estimates.
+        Must run AFTER :meth:`account_round` so scenarios see the freshest
+        tables; the expensive solve (:meth:`solve_scenarios`) can then run
+        anywhere."""
+        if not self.scenario_T_candidates and not self.scenario_dropouts:
+            return [], []
+        base = self.estimator.problem(T)
+        problems, labels = [], []
+        for Tc in self.scenario_T_candidates:
+            Tc_eff = int(np.clip(int(Tc), int(base.lower.sum()), int(base.upper.sum())))
+            problems.append(self.estimator.problem(Tc_eff))
+            labels.append(f"T={Tc_eff}")
+        for sub in self.scenario_dropouts:
+            problems.append(apply_dropout(base, sub))
+            labels.append("drop=" + ",".join(str(int(i)) for i in sorted(set(sub))))
+        return problems, labels
+
+    def solve_scenarios(self, problems, labels) -> Optional[ScenarioReport]:
+        """Evaluates the snapshotted what-ifs with ONE batched DP solve
+        through the engine (the pipelined campaign runs this whole stage on
+        the planner thread); returns None when no scenarios are
+        configured."""
+        if not problems:
+            return None
+        X = self.engine.solve(problems)[:, : self.n_clients]
+        energies = np.array(
+            [total_cost(p, X[b]) for b, p in enumerate(problems)], dtype=np.float64
+        )
+        return ScenarioReport(labels=list(labels), assignments=X, energies=energies)
+
+    # ---- serial composition --------------------------------------------
+
     def run_round(
         self,
         round_index: int,
@@ -135,7 +263,9 @@ class FederatedServer:
         rng: np.random.Generator,
         unavailable=None,
     ) -> FLRoundResult:
-        """One FedAvg round.
+        """One FedAvg round: the stages composed serially (the reference
+        code path; ``fl/pipeline.py`` runs the same stages with the DP
+        solves moved off the hot path).
 
         ``unavailable``: optional iterable of client indices that dropped out
         before this round (paper §6 "loss of a device" future-work item):
@@ -143,31 +273,18 @@ class FederatedServer:
         remaining fleet — shrunk to the surviving capacity if necessary.
         """
         T = self._round_T(batches)
-        est_problem = self.estimator.problem(T)
-        if unavailable:
-            est_problem = apply_dropout(est_problem, unavailable)
-        x = schedule(est_problem, self.algorithm)
-        est_cost = total_cost(est_problem, x)
-
-        num_steps = jnp.asarray(x, dtype=jnp.int32)
-        self.params, mean_loss = self._round_fn(self.params, jnp.asarray(batches), num_steps)
-
-        # charge true energy + feed measurements back
-        true_problem = self.estimator.true_problem(T)
-        true_cost = total_cost(true_problem, x)
-        per_dev = [true_problem.cost(i, int(x[i])) for i in range(self.n_clients)]
-        for i, dev in enumerate(self.estimator.fleet):
-            if x[i] > 0:
-                self.estimator.observe(i, int(x[i]), dev.measure(int(x[i]), rng))
+        plan = self.plan_round(round_index, T, self.build_problem(T, unavailable))
+        mean_loss = self.train_round(plan, batches)
+        acct = self.account_round(plan, rng)
         # what-if planning for the NEXT round, on the freshest estimates
-        scenarios = self._plan_scenarios(T)
+        scenarios = self.solve_scenarios(*self.build_scenarios(T))
         return FLRoundResult(
             round_index=round_index,
-            assignments=np.asarray(x),
+            assignments=plan.assignments,
             mean_loss=float(mean_loss),
-            energy_joules=float(true_cost),
-            estimated_joules=float(est_cost),
-            makespan_joules=float(max(per_dev)),
+            energy_joules=acct["energy_joules"],
+            estimated_joules=plan.est_cost,
+            makespan_joules=acct["makespan_joules"],
             scenarios=scenarios,
         )
 
@@ -178,24 +295,3 @@ class FederatedServer:
             n, s = batches.shape[0], batches.shape[1]
             return (n * s) // 2
         return int(self.round_T)
-
-    def _plan_scenarios(self, T: int) -> Optional[ScenarioReport]:
-        """Evaluates every configured what-if (candidate workloads, dropout
-        subsets) against the current energy estimates with ONE batched DP
-        solve; returns None when no scenarios are configured."""
-        if not self.scenario_T_candidates and not self.scenario_dropouts:
-            return None
-        base = self.estimator.problem(T)
-        problems, labels = [], []
-        for Tc in self.scenario_T_candidates:
-            Tc_eff = int(np.clip(int(Tc), int(base.lower.sum()), int(base.upper.sum())))
-            problems.append(self.estimator.problem(Tc_eff))
-            labels.append(f"T={Tc_eff}")
-        for sub in self.scenario_dropouts:
-            problems.append(apply_dropout(base, sub))
-            labels.append("drop=" + ",".join(str(int(i)) for i in sorted(set(sub))))
-        X = self.engine.solve(problems)[:, : self.n_clients]
-        energies = np.array(
-            [total_cost(p, X[b]) for b, p in enumerate(problems)], dtype=np.float64
-        )
-        return ScenarioReport(labels=labels, assignments=X, energies=energies)

@@ -1,0 +1,42 @@
+"""Toy embedding LM shared by the FL tests and benchmarks.
+
+A two-matrix next-token model (embed -> tanh -> unembed) that is cheap to
+jit yet has a real loss surface — enough for the FL substrate's concerns
+(masked local training, FedAvg aggregation, energy-vs-loss accounting)
+without modeling machinery. One definition here keeps the bit-identicality
+suites honest: tests/test_fl_substrate.py, tests/test_fl_pipeline.py,
+benchmarks/bench_fl_energy.py, and benchmarks/bench_async.py all train the
+SAME model, so a change to the loss cannot silently diverge them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_tiny_lm"]
+
+
+def make_tiny_lm(vocab: int, dim: int):
+    """Returns ``(init_fn, loss_fn)`` for a toy next-token LM.
+
+    ``init_fn(key)`` -> params pytree; ``loss_fn(params, batch)`` -> scalar
+    mean NLL for a ``(B, seq+1)`` int token batch (first ``seq`` positions
+    are inputs, shifted-by-one are targets).
+    """
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "emb": jax.random.normal(k1, (vocab, dim)) * 0.1,
+            "out": jax.random.normal(k2, (dim, vocab)) * 0.1,
+        }
+
+    def loss(params, batch):
+        x, y = batch[:, :-1], batch[:, 1:]
+        h = jnp.tanh(params["emb"][x])
+        logits = h @ params["out"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
+
+    return init, loss

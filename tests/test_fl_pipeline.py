@@ -1,0 +1,212 @@
+"""Async round pipeline (DESIGN.md §11): the pipelined campaign runner must
+be bit-identical to the serial one, planner-thread crashes must surface in
+the caller, and the executors/futures must keep their contracts."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Problem
+from repro.core.sweep import SweepEngine
+from repro.data import client_corpora, make_lm_examples
+from repro.fl import (
+    AsyncCampaignRunner,
+    CampaignRunner,
+    EnergyEstimator,
+    FederatedServer,
+    PlanFuture,
+    SerialPlanExecutor,
+    ThreadPlanExecutor,
+    make_fleet,
+    run_campaign,
+)
+from repro.fl.toy import make_tiny_lm
+from repro.optim import sgd
+
+VOCAB = 64
+DIM = 16
+SEQ = 8
+
+tiny_lm_init, tiny_lm_loss = make_tiny_lm(VOCAB, DIM)
+
+
+def _build(seed=0, n_clients=5, engine=None, scenarios=True):
+    rng = np.random.default_rng(seed)
+    fleet = make_fleet(rng, n_clients, max_batches=8)
+    est = EnergyEstimator(fleet)
+    est.calibrate(rng)
+    corpora = client_corpora(rng, n_clients, 400, VOCAB)
+    examples = [make_lm_examples(c, SEQ) for c in corpora]
+    T = sum(d.max_batches for d in fleet) // 2
+    server = FederatedServer(
+        loss_fn=tiny_lm_loss,
+        init_params=tiny_lm_init(jax.random.PRNGKey(seed)),
+        client_optimizer=sgd(0.3),
+        estimator=est,
+        algorithm="auto",
+        scenario_T_candidates=[T // 2, T] if scenarios else None,
+        scenario_dropouts=[[0], [1]] if scenarios else None,
+        engine=engine if engine is not None else SweepEngine(),
+    )
+    return server, examples, rng, T
+
+
+# ---------------------------------------------------------------------------
+# determinism: pipelined == serial, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_campaign_bit_identical_to_serial():
+    server_s, ex_s, rng_s, T = _build(seed=0)
+    h_serial = run_campaign(server_s, ex_s, 3, round_T=T, batch_size=4, rng=rng_s)
+
+    server_p, ex_p, rng_p, _ = _build(seed=0)
+    h_pipe = AsyncCampaignRunner(server_p).run(ex_p, 3, T, 4, rng_p)
+
+    assert len(h_serial.rounds) == len(h_pipe.rounds) == 3
+    for a, b in zip(h_serial.rounds, h_pipe.rounds):
+        np.testing.assert_array_equal(a.assignments, b.assignments)
+        assert a.mean_loss == b.mean_loss
+        assert a.energy_joules == b.energy_joules
+        assert a.estimated_joules == b.estimated_joules
+        assert a.makespan_joules == b.makespan_joules
+        assert a.scenarios.labels == b.scenarios.labels
+        np.testing.assert_array_equal(a.scenarios.assignments, b.scenarios.assignments)
+        np.testing.assert_array_equal(a.scenarios.energies, b.scenarios.energies)
+    np.testing.assert_array_equal(h_serial.losses, h_pipe.losses)
+    assert h_serial.total_energy == h_pipe.total_energy
+    # both plan the same solves: identical engine traffic on fresh engines
+    assert h_serial.dp_cache_stats == h_pipe.dp_cache_stats
+    # the final models match too (aggregation is part of the shared path)
+    for pa, pb in zip(jax.tree.leaves(server_s.params), jax.tree.leaves(server_p.params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_pipeline_stats_observability():
+    server, ex, rng, T = _build(seed=1)
+    hist = run_campaign(server, ex, 2, round_T=T, batch_size=4, rng=rng, pipelined=True)
+    stats = hist.pipeline_stats
+    assert stats.mode == "pipelined"
+    assert len(stats.round_wall_s) == 2
+    assert stats.planner_busy_s > 0.0
+    assert 0.0 <= stats.overlap_fraction <= 1.0
+    # plan + scenario task per round, all recorded by label
+    labels = [t["label"] for t in stats.tasks]
+    assert labels == ["plan[0]", "scenarios[0]", "plan[1]", "scenarios[1]"]
+    summary = hist.summary()
+    assert summary["pipeline_mode"] == "pipelined"
+    assert "planner_overlap_fraction" in summary
+    # serial mode reports zero overlap by construction
+    server2, ex2, rng2, _ = _build(seed=1)
+    h2 = run_campaign(server2, ex2, 2, round_T=T, batch_size=4, rng=rng2)
+    assert h2.pipeline_stats.mode == "serial"
+    assert h2.pipeline_stats.overlap_fraction == 0.0
+
+
+# ---------------------------------------------------------------------------
+# crash propagation + thread hygiene
+# ---------------------------------------------------------------------------
+
+
+class _BoomEngine(SweepEngine):
+    def dispatch(self, problems):
+        raise RuntimeError("boom: scenario solve exploded")
+
+
+def _planner_threads():
+    return [t for t in threading.enumerate() if t.name.startswith("fl-planner")]
+
+
+def test_planner_thread_exception_propagates():
+    server, ex, rng, T = _build(seed=2, engine=_BoomEngine())
+    with pytest.raises(RuntimeError, match="boom"):
+        run_campaign(server, ex, 3, round_T=T, batch_size=4, rng=rng, pipelined=True)
+    # the planner thread is joined even on failure
+    assert _planner_threads() == []
+
+
+def test_serial_mode_raises_same_error():
+    server, ex, rng, T = _build(seed=2, engine=_BoomEngine())
+    with pytest.raises(RuntimeError, match="boom"):
+        run_campaign(server, ex, 3, round_T=T, batch_size=4, rng=rng)
+
+
+def test_planner_thread_cleanup_on_success():
+    server, ex, rng, T = _build(seed=3)
+    AsyncCampaignRunner(server).run(ex, 2, T, 4, rng)
+    assert _planner_threads() == []
+
+
+# ---------------------------------------------------------------------------
+# executor / future contracts
+# ---------------------------------------------------------------------------
+
+
+def test_serial_executor_runs_inline_and_counts_blocked():
+    ex = SerialPlanExecutor()
+    ran = []
+    f = ex.submit("t", lambda v: ran.append(v) or v * 2, 21)
+    assert ran == [21]  # inline at submit time
+    assert f.done() and f.result() == 42
+    assert f.blocked_s == f.busy_s  # serial planning is fully on the hot path
+
+
+def test_thread_executor_fifo_and_shutdown():
+    ex = ThreadPlanExecutor(name="fl-planner-test")
+    order = []
+
+    def task(i):
+        time.sleep(0.005)
+        order.append(i)
+        return i
+
+    futs = [ex.submit(f"t{i}", task, i) for i in range(5)]
+    assert [f.result() for f in futs] == list(range(5))
+    assert order == list(range(5))  # FIFO: submission order == execution order
+    ex.shutdown()
+    assert not any(t.name == "fl-planner-test" for t in threading.enumerate())
+
+
+def test_plan_future_reraises():
+    ex = ThreadPlanExecutor(name="fl-planner-test2")
+    try:
+        f = ex.submit("bad", lambda: (_ for _ in ()).throw(ValueError("nope")))
+        with pytest.raises(ValueError, match="nope"):
+            f.result()
+        with pytest.raises(ValueError, match="nope"):  # sticky
+            f.result()
+    finally:
+        ex.shutdown()
+
+
+def test_campaign_runner_rejects_unknown_mode():
+    server, _, _, _ = _build(seed=4, scenarios=False)
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        CampaignRunner(server, mode="warp")
+
+
+# ---------------------------------------------------------------------------
+# SweepEngine.dispatch handle
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_dispatch_matches_solve():
+    rng = np.random.default_rng(0)
+    problems = []
+    for _ in range(3):
+        n, T = 4, 12
+        upper = rng.integers(4, 9, n)
+        tables = tuple(np.cumsum(rng.uniform(0.5, 2.0, u + 1)) - 1 for u in upper)
+        problems.append(
+            Problem(T=T, lower=np.zeros(n, dtype=int), upper=upper, cost_tables=tables)
+        )
+    eng = SweepEngine()
+    handle = eng.dispatch(problems)
+    X = handle.result()
+    assert handle.done()
+    assert X is handle.result()  # memoized
+    np.testing.assert_array_equal(X, eng.solve(problems))
+    assert isinstance(PlanFuture, type)  # exported symbol sanity

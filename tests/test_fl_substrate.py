@@ -10,30 +10,15 @@ from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.data import client_corpora, dirichlet_sizes, lm_round_batches, make_lm_examples
 from repro.fl import EnergyEstimator, FederatedServer, make_fleet, run_campaign
 from repro.fl.client import local_train
+from repro.fl.toy import make_tiny_lm
 from repro.optim import adafactor, adamw, apply_updates, momentum, sgd
 
 VOCAB = 64
 DIM = 16
 SEQ = 8
 
-
-def tiny_lm_init(key):
-    k1, k2 = jax.random.split(key)
-    return {
-        "emb": jax.random.normal(k1, (VOCAB, DIM)) * 0.1,
-        "out": jax.random.normal(k2, (DIM, VOCAB)) * 0.1,
-    }
-
-
-def tiny_lm_loss(params, batch):
-    # batch: (B, SEQ+1) int tokens
-    x, y = batch[:, :-1], batch[:, 1:]
-    h = params["emb"][x]  # (B, S, D)
-    h = jnp.tanh(h)
-    logits = h @ params["out"]
-    logp = jax.nn.log_softmax(logits)
-    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
-    return nll
+# batch: (B, SEQ+1) int tokens
+tiny_lm_init, tiny_lm_loss = make_tiny_lm(VOCAB, DIM)
 
 
 # ---------------------------------------------------------------------------

@@ -10,8 +10,10 @@ general policy over every benchmark JSON:
     below the baseline FAILS, and a gated metric that *disappears* from the
     current output (a silently-skipped benchmark leg) also FAILS.
   * **absolute floors** (FLOORS below) encode hard promises — e.g. the
-    batched engine must stay >= 5x over looped solves, and a cached sweep
-    solve must stay >= 5x over cold — regardless of what the baseline says.
+    batched engine must stay >= 5x over looped solves, a cached sweep
+    solve >= 5x over cold, the blocked min-plus kernel >= 2x over the
+    dense oracle — regardless of what the baseline says. A floored metric
+    that disappears from the current output also FAILS.
   * **everything else** (raw wall-clock ``_s`` seconds, warm-path
     micro-ratios like ``speedup_warm`` that legitimately swing 2x between
     identical runs, the CPU-sharded ``throughput_ratio`` smoke) is printed
@@ -52,6 +54,12 @@ GATED = {
     # 2-core CI box the planner's XLA work contends with training and the
     # ratio hovers near 1.0 — the stable promise is the overlap fraction.
     "BENCH_async.json": ("planner_overlap_fraction",),
+    # no baseline-ratio gating: speedup_blocked_vs_dense legitimately swings
+    # ~2x with box load (3-5x measured on an idle-vs-busy 2-core box, same
+    # pathology as speedup_warm) and speedup_fused_vs_twodispatch is a
+    # near-1x info metric. The stable promise is the HARD FLOOR below;
+    # missing-metric detection still covers floored metrics.
+    "BENCH_kernels.json": (),
 }
 
 # Hard floors: benchmark file -> {metric: minimum}. These hold even on the
@@ -62,6 +70,10 @@ FLOORS = {
     # the async pipeline must hide at least half of all planning time
     # behind client training (DESIGN.md §11; measured ~0.95+ on CPU)
     "BENCH_async.json": {"planner_overlap_fraction": 0.5},
+    # the blocked backend must stay >= 2x over the dense oracle at the
+    # memory-bound acceptance shape B=8, T=8192, W=512 (DESIGN.md §12;
+    # ~3-8x measured on CPU)
+    "BENCH_kernels.json": {"speedup_blocked_vs_dense": 2.0},
 }
 
 
@@ -112,16 +124,19 @@ def check_file(path: str, baseline_dir: str, tolerance: float) -> tuple:
                     f"* (1 - {tolerance:.0%})"
                 )
         floor = FLOORS.get(name, {}).get(key)
-        if floor is not None and val < floor:
-            status = "FAIL"
-            fails.append(f"{name}: {key} = {val:.2f} below hard floor {floor}")
+        if floor is not None:
+            if val < floor:
+                status = "FAIL"
+                fails.append(f"{name}: {key} = {val:.2f} below hard floor {floor}")
+            elif status == "info":
+                status = "ok"  # floor-only metrics are gated, not informational
         ref_s = f"{ref:.4g}" if ref is not None else "-"
         print(f"  {key:<32} {ref_s:>12} {val:>12.4g} {delta:>8}  {status}")
         rows.append((key, ref_s, f"{val:.4g}", delta, status))
 
-    # a gated metric that vanished (e.g. a benchmark leg silently skipped)
-    # must not pass unnoticed
-    expected = set(GATED.get(name, ()))
+    # a gated or floored metric that vanished (e.g. a benchmark leg silently
+    # skipped) must not pass unnoticed
+    expected = set(GATED.get(name, ())) | set(FLOORS.get(name, {}))
     if base is not None:
         expected |= {k for k in base if is_gated(name, k)}
     for key in sorted(expected - set(cur)):

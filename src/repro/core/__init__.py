@@ -15,7 +15,7 @@ from .costs import (
     sublinear_cost,
     superlinear_cost,
 )
-from .jax_dp import solve_schedule_dp_batch, solve_schedule_dp_jax
+from .jax_dp import solve_fused_batch_jax, solve_schedule_dp_batch, solve_schedule_dp_jax
 from .marginal import marco, mardec, mardecun, marin
 from .mc2mkp import (
     ItemClass,
@@ -65,6 +65,7 @@ __all__ = [
     "mc2mkp_matrices",
     "solve_schedule_dp",
     "solve_schedule_dp_jax",
+    "solve_fused_batch_jax",
     "solve_schedule_dp_batch",
     "brute_force_schedule",
     "marin",

@@ -2,9 +2,13 @@
 instances (contiguous classes), built on the min-plus convolution kernel.
 
 The DP row update over classes is a ``lax.scan``; each step is one banded
-min-plus convolution (``repro.kernels``). Backtracking is a reverse
-``lax.scan`` over the stacked argmin matrix, so the whole solver is a single
-jittable program — this is what runs server-side every FL round when
+min-plus convolution (``repro.kernels``, ``backend="auto"`` dispatches per
+hardware). Backtracking is a reverse ``lax.scan`` over the stacked argmin
+matrix, fused into the SAME jitted program as the class scan
+(:func:`solve_fused_batch_jax`): one dispatch returns only the ``(B, n)``
+schedules plus the final DP row ``K_last`` — the ``(n, B, T+1)`` argmin
+matrix never crosses a program boundary, so nothing bigger than the answer
+is ever transferred. This is what runs server-side every FL round when
 schedules are recomputed from refreshed energy estimates.
 
 Inputs are the 0-lower-limit equivalent instance (Section 5.2) as dense
@@ -19,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.ops import BIG, minplus_step_batch
+from ..kernels.ops import BIG, minplus_step_batch, resolve_backend
 from .problem import (
     Problem,
     ProblemBatch,
@@ -30,6 +34,7 @@ from .problem import (
 __all__ = [
     "solve_schedule_dp_jax",
     "solve_schedule_dp_batch",
+    "solve_fused_batch_jax",
     "dp_tables_jax",
     "dp_tables_batch_jax",
     "pack_problem",
@@ -48,10 +53,14 @@ def pack_problem(p0):
         return jnp.asarray(np.minimum(p0.costs, float(BIG)).astype(np.float32))
     W = int(p0.upper.max()) + 1
     n = p0.n
+    lens = p0.upper.astype(np.int64) + 1  # valid prefix per class: 0..U_i
     costs = np.full((n, W), float(BIG), dtype=np.float32)
-    for i in range(n):
-        u = int(p0.upper[i])
-        costs[i, : u + 1] = p0.cost_tables[i][: u + 1]
+    # one masked scatter instead of a per-class assignment loop (this sits
+    # on the cold path of every single-instance solve)
+    mask = np.arange(W)[None, :] < lens[:, None]
+    costs[mask] = np.concatenate(
+        [np.asarray(t[:l], dtype=np.float32) for t, l in zip(p0.cost_tables, lens)]
+    )
     return jnp.asarray(costs)
 
 
@@ -59,38 +68,45 @@ def pack_problem(p0):
 def dp_tables_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
     """Scans the DP over classes for ONE instance: the ``B = 1`` slice of
     :func:`dp_tables_batch_jax`. Returns (K_last (T+1,), I (n, T+1))."""
-    k_last, I = dp_tables_batch_jax(costs[None], T, backend=backend)
+    # slice the unjitted body: jit-of-jit would trace the batch wrapper a
+    # second time per shape for zero caching benefit
+    k_last, I = _dp_tables_batch(costs[None], T, backend=backend)
     return k_last[0], I[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("T",))
 def backtrack_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
     """Reverse scan: x_i = I[i, t]; t -= x_i (weights == item index). The
-    ``B = 1`` slice of :func:`backtrack_batch_jax`."""
-    return backtrack_batch_jax(I[:, None], jnp.asarray(t_star)[None], T)[0]
+    ``B = 1`` slice of :func:`backtrack_batch_jax` (unjitted body — see
+    :func:`dp_tables_jax`)."""
+    return _backtrack_batch(I[:, None], jnp.asarray(t_star)[None], T)[0]
 
 
-def solve_schedule_dp_jax(problem: Problem, backend: str = "ref") -> np.ndarray:
+def solve_schedule_dp_jax(problem: Problem, backend: str = "auto") -> np.ndarray:
     """Drop-in replacement for :func:`repro.core.mc2mkp.solve_schedule_dp`
-    running as a jitted JAX program (optionally via the Pallas kernel)."""
+    running as ONE jitted JAX program (DP scan + fused backtrack) on the
+    hardware-dispatched kernel backend."""
     problem.validate()
     p0 = remove_lower_limits(problem)
     costs = pack_problem(p0)
-    k_last, I = dp_tables_jax(costs, int(p0.T), backend=backend)
     # Scheduling instances always fill the knapsack: T* == T.
-    t_star = jnp.asarray(p0.T)
-    x0 = np.asarray(jax.device_get(backtrack_jax(I, t_star, int(p0.T))))
+    t_star = jnp.asarray([p0.T], dtype=jnp.int32)
+    X, _ = solve_fused_batch_jax(
+        costs[None], t_star, int(p0.T), backend=resolve_backend(backend)
+    )
+    x0 = np.asarray(jax.device_get(X))[0]
     return restore_lower_limits(problem, x0.astype(np.int64))
 
 
 # ---------------------------------------------------------------------------
-# Batched solver: B instances in one jitted program (DESIGN.md §9)
+# Batched solver: B instances in one jitted program (DESIGN.md §9, §12)
 # ---------------------------------------------------------------------------
 
 
 def _dp_tables_batch(costs: jnp.ndarray, T: int, backend: str = "ref"):
-    """Unjitted body of :func:`dp_tables_batch_jax` — the sweep engine
-    (``core/sweep.py``) closes over this inside its own per-bucket jits."""
+    """Unjitted body of :func:`dp_tables_batch_jax` — the fused solver and
+    the sweep engine (``core/sweep.py``) close over this inside their own
+    per-bucket jits."""
 
     def step(krow, cost_i):
         kout, iout = minplus_step_batch(krow, cost_i, backend=backend)
@@ -112,7 +128,10 @@ def dp_tables_batch_jax(costs: jnp.ndarray, T: int, backend: str = "ref"):
       T: static row width — the max ``T'`` across the batch; rows are shared,
         per-instance workloads only enter at backtracking via ``t_star``.
 
-    Returns (K_last ``(B, T+1)``, I ``(n, B, T+1)``).
+    Returns (K_last ``(B, T+1)``, I ``(n, B, T+1)``). Production solves use
+    :func:`solve_fused_batch_jax` instead, which never lets ``I`` escape the
+    program; this two-dispatch path remains as the oracle the fused solver
+    is validated against.
     """
     return _dp_tables_batch(costs, T, backend=backend)
 
@@ -138,26 +157,58 @@ def backtrack_batch_jax(I: jnp.ndarray, t_star: jnp.ndarray, T: int):
     return _backtrack_batch(I, t_star, T)
 
 
-def solve_schedule_dp_batch(problems, backend: str = "ref") -> np.ndarray:
-    """Solves ``B`` scheduling instances with ONE jitted batched DP.
+def _solve_fused_batch(costs: jnp.ndarray, t_star: jnp.ndarray, T: int, backend: str = "ref"):
+    """Unjitted fused DP + backtrack (the sweep engine's per-bucket
+    executables close over this). Returns ``(X (B, n), K_last (B, T+1))``:
+    the argmin matrix ``I`` lives only inside the program — XLA keeps it
+    device-resident between the class scan and the reverse scan, and only
+    the schedules and the final DP row come back."""
+    k_last, I = _dp_tables_batch(costs, T, backend=backend)
+    X = _backtrack_batch(I, t_star, T)
+    return X, k_last
+
+
+@functools.partial(jax.jit, static_argnames=("T", "backend"))
+def solve_fused_batch_jax(costs: jnp.ndarray, t_star: jnp.ndarray, T: int, backend: str = "ref"):
+    """Fused batched solver: class scan + reverse backtrack in ONE jitted
+    call (DESIGN.md §12).
+
+    Args:
+      costs: ``(B, n, W)`` packed tables (0-lower-limit instances).
+      t_star: ``(B,)`` int32 filled capacities to backtrack from.
+      T: static row width (max ``T'`` across the batch).
+
+    Returns ``(X, K_last)``: ``(B, n)`` int32 schedules and the ``(B, T+1)``
+    final DP row (``K_last[b, t]`` = minimal cost of assigning exactly ``t``
+    units across the 0-lower-limit instance ``b`` — a free Pareto curve over
+    workloads). Compared to chaining :func:`dp_tables_batch_jax` +
+    :func:`backtrack_batch_jax`, the ``(n, B, T+1)`` argmin matrix never
+    crosses a dispatch boundary and the second trace/launch disappears.
+    """
+    return _solve_fused_batch(costs, t_star, T, backend=backend)
+
+
+def solve_schedule_dp_batch(problems, backend: str = "auto") -> np.ndarray:
+    """Solves ``B`` scheduling instances with ONE fused jitted batched DP.
 
     Accepts a sequence of :class:`Problem` (ragged ``n``/``U_i``/``T`` are
     padded into a dense stack) or a prebuilt :class:`ProblemBatch`. Returns a
     ``(B, n)`` int64 array of schedules — row ``b`` solves instance ``b``;
     columns past an instance's own ``n`` are 0.
 
-    The whole sweep is two jit calls (DP scan + backtrack) specialized on the
-    padded shape ``(B, n, W, T_max)``, so closely-related what-if instances
-    (deadline sweeps, candidate workloads, dropout subsets) share one
-    compilation and one kernel launch instead of ``B``.
+    The whole sweep is one jit call (DP scan + fused backtrack) specialized
+    on the padded shape ``(B, n, W, T_max)``, so closely-related what-if
+    instances (deadline sweeps, candidate workloads, dropout subsets) share
+    one compilation and one kernel launch instead of ``B`` — and only the
+    ``(B, n)`` schedules are transferred to the host.
     """
     batch = problems if isinstance(problems, ProblemBatch) else ProblemBatch.from_problems(problems)
     batch.validate()
     b0 = remove_lower_limits(batch)
     costs = pack_problem(b0)
     Tmax = int(b0.T.max())
-    _, I = dp_tables_batch_jax(costs, Tmax, backend=backend)
     # Scheduling instances always fill the knapsack: T*_b == T'_b.
     t_star = jnp.asarray(b0.T, dtype=jnp.int32)
-    X0 = np.asarray(jax.device_get(backtrack_batch_jax(I, t_star, Tmax)))
+    X, _ = solve_fused_batch_jax(costs, t_star, Tmax, backend=resolve_backend(backend))
+    X0 = np.asarray(jax.device_get(X))
     return restore_lower_limits(batch, X0.astype(np.int64))

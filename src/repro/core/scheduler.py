@@ -104,10 +104,11 @@ def schedule_batch(
 
     ``engine``: an explicit :class:`~repro.core.sweep.SweepEngine` (e.g. a
     sharded one); ``None`` uses the process-wide default for ``backend``
-    (``backend=None`` -> "ref"), so repeated shapes anywhere in the process
-    skip compilation. Requesting a backend that contradicts the given
-    engine's (e.g. ``dp_jax_pallas`` with a "ref" engine) raises ValueError
-    instead of silently running the engine's kernel.
+    (``backend=None`` -> "auto": the per-hardware dispatch table — blocked
+    jnp on CPU, tuned Pallas on TPU/GPU), so repeated shapes anywhere in
+    the process skip compilation. Requesting a backend that contradicts the
+    given engine's (e.g. ``dp_jax_pallas`` with a "blocked" engine) raises
+    ValueError instead of silently running the engine's kernel.
 
     Returns a list of ``(n_b,)`` int64 schedules, one per input instance.
     """

@@ -48,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
-from .jax_dp import _backtrack_batch, _dp_tables_batch, pack_problem
+from ..kernels.ops import resolve_backend
+from .jax_dp import _solve_fused_batch, pack_problem
 from .problem import ProblemBatch, remove_lower_limits, restore_lower_limits
 
 __all__ = [
@@ -90,12 +91,21 @@ class SweepHandle:
     (JAX async dispatch — no ``block_until_ready`` issued), but the schedule
     is not yet on the host. :meth:`result` blocks on the device transfer,
     unpads, and restores lower limits; repeated calls return the same array.
+
+    The fused executable (DESIGN.md §12) also returns the final DP row:
+    :meth:`k_last` / :meth:`objectives` expose it without any extra
+    dispatch. Both are in 0-lower-limit terms (Section 5.2) — add each
+    instance's fixed cost ``sum_i C_i(L_i)`` to recover original-instance
+    energies.
     """
 
-    def __init__(self, raw, batch):
+    def __init__(self, raw, k_last, batch, t_star):
         self._raw = raw  # (Bb, nb) device array, still possibly computing
+        self._k_last = k_last  # (Bb, Tb+1) final DP row, also in flight
         self._batch = batch  # the ORIGINAL (unpadded) ProblemBatch
+        self._t_star = t_star  # (Bb,) filled capacities of the padded batch
         self._out: Optional[np.ndarray] = None
+        self._k_host: Optional[np.ndarray] = None  # cached k_last transfer
 
     def done(self) -> bool:
         """True once the device computation has finished (best-effort: jax
@@ -113,13 +123,34 @@ class SweepHandle:
             self._out = restore_lower_limits(self._batch, X0.astype(np.int64))
         return self._out
 
+    def k_last(self) -> np.ndarray:
+        """The ``(B, T_bucket+1)`` final DP row of the real instances:
+        ``k_last()[b, t]`` is the minimal cost of assigning exactly ``t``
+        units in 0-lower-limit instance ``b`` (BIG where infeasible) — a
+        free workload-Pareto curve per solve. The device transfer happens
+        once; repeated calls (and :meth:`objectives`) reuse it."""
+        if self._k_host is None:
+            self._k_host = np.asarray(jax.device_get(self._k_last))[: self._batch.B]
+        return self._k_host
+
+    def objectives(self) -> np.ndarray:
+        """Per-instance optimal objective ``K_last[b, t*_b]`` of the
+        0-lower-limit instances, shape ``(B,)`` float32 — what the returned
+        schedules cost, with no extra dispatch or host-side re-evaluation."""
+        k = self.k_last()
+        t = np.asarray(self._t_star)
+        return k[np.arange(self._batch.B), t[: self._batch.B]]
+
 
 class SweepEngine:
     """Compile-cached, optionally device-sharded batched (MC)^2MKP solver.
 
     Args:
-      backend: min-plus kernel backend ("ref" | "pallas" | "pallas_tpu"),
-        forwarded to :func:`~repro.kernels.ops.minplus_step_batch`.
+      backend: min-plus kernel backend, forwarded to
+        :func:`~repro.kernels.ops.minplus_step_batch`. The default "auto"
+        resolves per hardware at construction (cpu -> "blocked",
+        tpu -> "pallas_tpu", gpu -> "pallas_gpu"); "ref" forces the dense
+        oracle.
       max_entries: LRU capacity — distinct shape buckets kept warm.
       mesh: optional ``jax.sharding.Mesh``; when set, the batch axis is
         sharded over ``mesh_axis`` and ``B`` buckets round up to a multiple
@@ -130,14 +161,14 @@ class SweepEngine:
 
     def __init__(
         self,
-        backend: str = "ref",
+        backend: str = "auto",
         max_entries: int = 64,
         mesh=None,
         mesh_axis: Optional[str] = None,
     ):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
-        self.backend = backend
+        self.backend = resolve_backend(backend)
         self.max_entries = int(max_entries)
         self.mesh = mesh
         self.mesh_axis = mesh_axis or (mesh.axis_names[0] if mesh is not None else None)
@@ -195,8 +226,9 @@ class SweepEngine:
             # unless the entry is evicted and rebuilt).
             with self._lock:
                 self._compiles += 1
-            _, I = _dp_tables_batch(costs, Tb, backend=backend)
-            return _backtrack_batch(I, t_star, Tb)
+            # fused DP + backtrack (DESIGN.md §12): one dispatch, and only
+            # (X, K_last) leave the program — never the (n, B, T+1) argmins
+            return _solve_fused_batch(costs, t_star, Tb, backend=backend)
 
         return jax.jit(run)
 
@@ -233,7 +265,8 @@ class SweepEngine:
                 t_star, NamedSharding(self.mesh, P(self.mesh_axis))
             )
         fn = self._entry((Bb, nb, Tb, Wb))
-        return SweepHandle(fn(costs, t_star), batch)
+        X_raw, k_last = fn(costs, t_star)
+        return SweepHandle(X_raw, k_last, batch, np.asarray(padded.T, dtype=np.int32))
 
     def solve(self, problems) -> np.ndarray:
         """Drop-in for :func:`~repro.core.jax_dp.solve_schedule_dp_batch`:
@@ -251,8 +284,11 @@ class SweepEngine:
 _DEFAULT_ENGINES: dict = {}
 
 
-def default_engine(backend: str = "ref") -> SweepEngine:
-    """The shared per-backend engine (created on first use)."""
+def default_engine(backend: str = "auto") -> SweepEngine:
+    """The shared per-backend engine (created on first use). Keyed on the
+    RESOLVED backend, so "auto" and its hardware-resolved name (e.g.
+    "blocked" on CPU) share one engine and one warm cache."""
+    backend = resolve_backend(backend)
     eng = _DEFAULT_ENGINES.get(backend)
     if eng is None:
         eng = _DEFAULT_ENGINES[backend] = SweepEngine(backend=backend)
@@ -271,15 +307,17 @@ def solve_dp_batch_cached(
     shared default for ``backend``).
 
     ``backend=None`` means "whatever the engine runs" (default engines:
-    "ref"). Naming BOTH an engine and a different backend is a contradiction
-    — the engine's executables are compiled for ITS backend — and raises
-    rather than silently running the wrong kernel.
+    "auto", resolved per hardware). Naming BOTH an engine and a different
+    backend is a contradiction — the engine's executables are compiled for
+    ITS backend — and raises rather than silently running the wrong kernel
+    (backends are compared after "auto" resolution, so requesting "auto" on
+    the default CPU engine is not a conflict).
     """
     if engine is not None:
-        if backend is not None and backend != engine.backend:
+        if backend is not None and resolve_backend(backend) != engine.backend:
             raise ValueError(
                 f"backend {backend!r} conflicts with engine.backend "
                 f"{engine.backend!r}; pass an engine built for that backend"
             )
         return engine.solve(problems)
-    return default_engine(backend or "ref").solve(problems)
+    return default_engine(backend or "auto").solve(problems)

@@ -128,7 +128,11 @@ class FederatedServer:
         batched DP solve and attached to each :class:`FLRoundResult`.
 
         ``engine``: the :class:`~repro.core.sweep.SweepEngine` all batched
-        DP solves route through (``None``: the process-wide default). Round
+        DP solves route through (``None``: the process-wide default, whose
+        ``backend="auto"`` dispatches the min-plus kernel per hardware —
+        blocked jnp on CPU, tuned Pallas on TPU/GPU — and whose fused
+        executables return schedules without the argmin-matrix transfer).
+        Round
         shapes repeat while only the cost *values* drift, so round 1
         compiles the DP and every later round reuses the warm executable
         (inspect via ``server.engine.cache_stats()``).

@@ -1,0 +1,194 @@
+"""Blocked (tiled) jnp backend for the banded min-plus convolution.
+
+The dense oracle (`kernels/ref.py`) materializes the full ``(B, T+1, W)``
+candidate tensor per class step — ~640 MB of memory traffic per step at
+B=16, T=10k, W=1k — so every solve is bandwidth-bound long before it is
+compute-bound. This backend walks the *output* row in ``BT``-sized tiles
+(outer ``lax.scan``) and the band in ``BW``-sized chunks (inner
+``fori_loop``); inside a chunk the ``BW`` band offsets are unrolled into
+length-``BT`` vector min/argmin updates against a running carry, so the
+live state is O(B·BT) and the per-chunk working set O(B·(BT+BW)) — bounded
+by O(B·BT·BW) and tiny next to the oracle's O(B·T·W), with identical
+O(B·T·W) flops. The running-carry layout mirrors the blocked-softmax trick
+of FlashAttention (Dao et al. 2022): a streaming (min, argmin) pair
+replaces the full-row reduction, and XLA fuses the unrolled updates into
+cache-resident elementwise chains (~8x over the oracle at B=8, T=8k,
+W=512 on CPU — see BENCH_kernels.json).
+
+Bit-identity with the oracle (asserted by tests/test_kernels_blocked.py):
+
+* **values** — each candidate is the same float32 ``kprev[t-j] + cost[j]``
+  followed by the same ``>= BIG -> BIG`` saturation; regrouping a min is
+  exact, so tile values equal the dense values bit-for-bit.
+* **argmins** — band offsets are visited in ascending ``j`` and every
+  update uses *strict* improvement (``cand < best``), so the winner is the
+  first minimum over the whole band: exactly Algorithm 1's ascending-``j``
+  strict-improvement update, and exactly the oracle's ``argmin``.
+* **band edges / padding** — out-of-band reads land in a ``BIG`` prefix
+  (``t - j < 0``) or a ``BIG`` cost tail (``j > U_i``); ``BIG + x``
+  saturates back to exactly ``BIG``, and an all-BIG tile keeps the
+  ``argmin = 0`` convention because nothing strictly improves the ``BIG``
+  init carry.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import BIG
+
+__all__ = [
+    "auto_block_sizes",
+    "minplus_blocked",
+    "minplus_blocked_batch",
+    "pad_band_inputs",
+    "DEFAULT_BLOCK_BUDGET_BYTES",
+]
+
+# Nominal block budget: 4·B·BT·BW bytes — the footprint a materialized
+# (B, BT, BW) candidate block WOULD have. The streaming form only keeps
+# O(B·(BT+BW)) live, so this is a knob bounding the BT·BW work-per-chunk
+# product (vector length x unroll factor), not a cache-residency target;
+# 2 MB lands on the empirically fastest (512, 128) at the benchmark shape.
+DEFAULT_BLOCK_BUDGET_BYTES = 2 << 20
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-int(x) // m) * m
+
+
+def _pow2_ceil(v: int) -> int:
+    return 1 << max(0, int(v) - 1).bit_length() if v > 1 else 1
+
+
+def pad_band_inputs(kprev: jnp.ndarray, cost: jnp.ndarray, BT: int, BW: int):
+    """The blocked layout's shared padding: rows gain a ``Wpad``-entry BIG
+    prefix (every banded read ``t - j``, including from the padded band, is
+    an in-bounds slice) and a BIG tail to whole ``BT`` tiles; costs gain a
+    BIG tail to whole ``BW`` chunks. Both the jnp backend and the
+    Pallas-GPU kernel build their inputs here, so the layouts — and the
+    bit-identity contract that rests on BIG padding never winning an
+    argmin — cannot drift apart.
+
+    Returns ``(kprev_pad (B, Wpad+Tpad), cost_pad (B, Wpad), Tpad, Wpad)``.
+    """
+    B, Tp = kprev.shape
+    W = cost.shape[1]
+    Wpad = _ceil_to(W, BW)
+    Tpad = _ceil_to(Tp, BT)
+    kprev_pad = jnp.concatenate(
+        [
+            jnp.full((B, Wpad), BIG, jnp.float32),
+            kprev,
+            jnp.full((B, Tpad - Tp), BIG, jnp.float32),
+        ],
+        axis=1,
+    )
+    cost_pad = jnp.concatenate(
+        [cost, jnp.full((B, Wpad - W), BIG, jnp.float32)], axis=1
+    )
+    return kprev_pad, cost_pad, Tpad, Wpad
+
+
+def auto_block_sizes(
+    B: int, Tp: int, W: int, budget_bytes: int = DEFAULT_BLOCK_BUDGET_BYTES
+):
+    """Deterministic (BT, BW) for a row-update shape.
+
+    Policy: ``BW = min(128, ceil_pow2(W))`` bounds the unroll factor (and
+    HLO size) of the inner chunk; the nominal ``4·B·BT·BW``-byte block
+    budget then buys the widest output tile it can, clamped to [64, 2048]
+    and never wider than the padded row. Both are powers of two so tile
+    edges stay aligned across the pow2 shape buckets of the sweep engine
+    (DESIGN.md §10). Measured on CPU at B=8, T=8193, W=512 this lands on
+    (512, 128) — the fastest of the swept configurations.
+    """
+    B, Tp, W = int(B), int(Tp), int(W)
+    BW = min(128, _pow2_ceil(W))
+    elems = max(1, int(budget_bytes) // (4 * max(1, B)))  # BT*BW float32s
+    BT = max(64, min(2048, _pow2_ceil(elems // BW + 1) >> 1))
+    BT = min(BT, _pow2_ceil(Tp))
+    return BT, BW
+
+
+def minplus_blocked_batch(
+    kprev: jnp.ndarray,
+    cost: jnp.ndarray,
+    *,
+    BT: int | None = None,
+    BW: int | None = None,
+):
+    """Blocked batched DP row update. Same contract as
+    :func:`repro.kernels.ref.minplus_step_ref_batch`: ``kprev (B, T+1)``,
+    ``cost (B, W)`` -> ``(B, T+1)`` float32 values + int32 first-min
+    argmins, bit-identical to the oracle.
+
+    ``BT``/``BW`` default to :func:`auto_block_sizes`; any sizes >= 1 are
+    valid (ragged edges are BIG-padded). Pure traceable jnp — safe inside
+    the DP's ``lax.scan`` under outer jits (the sweep engine closes over it
+    per bucket).
+    """
+    kprev = jnp.asarray(kprev).astype(jnp.float32)
+    cost = jnp.asarray(cost).astype(jnp.float32)
+    B, Tp = kprev.shape
+    W = cost.shape[1]
+    bt, bw = auto_block_sizes(B, Tp, W)
+    BT = int(BT) if BT is not None else bt
+    BW = int(BW) if BW is not None else bw
+    if BT < 1 or BW < 1:
+        raise ValueError(f"block sizes must be >= 1, got BT={BT}, BW={BW}")
+
+    kprev_pad, cost_pad, Tpad, Wpad = pad_band_inputs(kprev, cost, BT, BW)
+    nT, nW = Tpad // BT, Wpad // BW
+
+    def tile(_, base):  # one BT-wide output tile starting at absolute t = base
+        def chunk(c, carry):
+            best, best_idx = carry
+            j0 = c * BW
+            # segment covering every read of this (tile, chunk) pair:
+            # seg[:, (BW-1) + dt - jj] = kprev_pad[:, Wpad + base + dt - (j0+jj)]
+            seg = jax.lax.dynamic_slice(
+                kprev_pad, (0, Wpad + base - j0 - (BW - 1)), (B, BT + BW - 1)
+            )
+            cchunk = jax.lax.dynamic_slice(cost_pad, (0, j0), (B, BW))
+            for jj in range(BW):  # unrolled length-BT vector updates
+                cand = (
+                    jax.lax.slice_in_dim(seg, BW - 1 - jj, BW - 1 - jj + BT, axis=1)
+                    + cchunk[:, jj : jj + 1]
+                )
+                cand = jnp.where(cand >= BIG, BIG, cand)  # oracle's saturation
+                improved = cand < best  # strict: first minimum wins
+                best = jnp.where(improved, cand, best)
+                best_idx = jnp.where(improved, j0 + jj, best_idx)
+            return best, best_idx
+
+        init = (
+            jnp.full((B, BT), BIG, jnp.float32),
+            jnp.zeros((B, BT), jnp.int32),
+        )
+        best, best_idx = jax.lax.fori_loop(0, nW, chunk, init)
+        return None, (best, best_idx)
+
+    _, (vals, idxs) = jax.lax.scan(tile, None, jnp.arange(nT) * BT)
+    kout = jnp.moveaxis(vals, 0, 1).reshape(B, Tpad)[:, :Tp]
+    iout = jnp.moveaxis(idxs, 0, 1).reshape(B, Tpad)[:, :Tp]
+    return kout, iout
+
+
+@functools.partial(jax.jit, static_argnames=("BT", "BW"))
+def minplus_blocked(
+    kprev: jnp.ndarray,
+    cost: jnp.ndarray,
+    *,
+    BT: int | None = None,
+    BW: int | None = None,
+):
+    """One blocked DP row update: the ``B = 1`` slice of the batched form
+    (same contract as :func:`repro.kernels.ref.minplus_step_ref`)."""
+    kout, iout = minplus_blocked_batch(
+        jnp.asarray(kprev)[None], jnp.asarray(cost)[None], BT=BT, BW=BW
+    )
+    return kout[0], iout[0]

@@ -1,0 +1,130 @@
+"""Pallas-GPU variant of the blocked min-plus kernel.
+
+Same blocked layout as ``kernels/blocked.py`` (``BT`` output tiles x ``BW``
+band chunks, running first-min carry), expressed as a Pallas kernel so the
+GPU lowering (Triton) keeps the tile and the row segment in registers /
+shared memory instead of streaming the dense ``(B, T+1, W)`` candidate
+tensor through HBM. One ``(b, ot)`` grid program owns one output tile of
+one batch element; the inner ``fori_loop`` walks the band in ``BW``-sized
+chunks whose updates are unrolled length-``BT`` vector min/argmin steps —
+no gather, only static shifted slices of the chunk's row segment, which
+Triton lowers to contiguous loads.
+
+GPU-vs-dense tie-breaking and saturation follow the same argument as the
+jnp blocked backend (ascending ``j``, strict improvement, ``BIG``
+saturation), so results are bit-identical to the oracle; the parity suite
+runs this kernel in interpret mode on CPU (this container has no GPU — on
+hardware, ``kernels/ops.py`` dispatches ``backend="auto"`` here with
+``interpret=False``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .blocked import pad_band_inputs
+from .ref import BIG
+
+__all__ = ["minplus_pallas_gpu", "minplus_pallas_gpu_batch", "GPU_DEFAULT_BT", "GPU_DEFAULT_BW"]
+
+# Triton-friendly defaults: a 256-wide f32 tile per program keeps register
+# pressure low at unroll factor 64.
+GPU_DEFAULT_BT = 256
+GPU_DEFAULT_BW = 64
+
+
+def _minplus_gpu_kernel(
+    kprev_pad_ref, cost_ref, kout_ref, iout_ref, *, BT: int, BW: int, nW: int, Wpad: int
+):
+    """Grid is ``(b, ot)``; the whole padded previous row of this batch
+    element is visible to the program, band chunks are dynamic slices."""
+    ot = pl.program_id(1)
+    base = ot * BT
+
+    def chunk(c, carry):
+        best, best_idx = carry
+        j0 = c * BW
+        # seg[(BW-1) + dt - jj] == kprev_pad[Wpad + base + dt - (j0 + jj)]
+        seg = kprev_pad_ref[0, pl.dslice(Wpad + base - j0 - (BW - 1), BT + BW - 1)]
+        cchunk = cost_ref[0, pl.dslice(j0, BW)]
+        for jj in range(BW):  # unrolled: static shifted slices, no gather
+            cand = jax.lax.slice_in_dim(seg, BW - 1 - jj, BW - 1 - jj + BT, axis=0) + cchunk[jj]
+            cand = jnp.where(cand >= BIG, BIG, cand)
+            improved = cand < best  # strict: first minimum wins
+            best = jnp.where(improved, cand, best)
+            best_idx = jnp.where(improved, j0 + jj, best_idx)
+        return best, best_idx
+
+    init = (jnp.full((BT,), BIG, jnp.float32), jnp.zeros((BT,), jnp.int32))
+    best, best_idx = jax.lax.fori_loop(0, nW, chunk, init)
+    kout_ref[0, ...] = best
+    iout_ref[0, ...] = best_idx
+
+
+def _minplus_gpu_call(kprev, cost, BT: int, BW: int, interpret: bool) -> tuple:
+    """Unjitted body shared by both entry points (jit-of-jit would trace a
+    second wrapper per shape for zero caching benefit)."""
+    kprev = kprev.astype(jnp.float32)
+    cost = cost.astype(jnp.float32)
+    B, Tp = kprev.shape
+    # same layout as the jnp blocked backend, from the same helper
+    kprev_pad, cost_pad, Tpad, Wpad = pad_band_inputs(kprev, cost, BT, BW)
+    grid = (B, Tpad // BT)
+    kout, iout = pl.pallas_call(
+        functools.partial(
+            _minplus_gpu_kernel, BT=BT, BW=BW, nW=Wpad // BW, Wpad=Wpad
+        ),
+        grid=grid,
+        in_specs=[
+            # the padded row stays whole per program: chunks slide over it
+            pl.BlockSpec((1, Wpad + Tpad), lambda b, ot: (b, 0)),
+            pl.BlockSpec((1, Wpad), lambda b, ot: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BT), lambda b, ot: (b, ot)),
+            pl.BlockSpec((1, BT), lambda b, ot: (b, ot)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tpad), jnp.float32),
+            jax.ShapeDtypeStruct((B, Tpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(kprev_pad, cost_pad)
+    return kout[:, :Tp], iout[:, :Tp]
+
+
+@functools.partial(jax.jit, static_argnames=("BT", "BW", "interpret"))
+def minplus_pallas_gpu_batch(
+    kprev: jnp.ndarray,
+    cost: jnp.ndarray,
+    *,
+    BT: int = GPU_DEFAULT_BT,
+    BW: int = GPU_DEFAULT_BW,
+    interpret: bool = False,
+) -> tuple:
+    """Batched DP row update via the Pallas-GPU blocked kernel. Same
+    contract as :func:`repro.kernels.ref.minplus_step_ref_batch`:
+    ``kprev (B, T+1)``, ``cost (B, W)`` -> ``(B, T+1)`` values + int32
+    argmins. ``interpret=True`` runs the kernel body in Python for CPU
+    parity tests."""
+    return _minplus_gpu_call(kprev, cost, BT, BW, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("BT", "BW", "interpret"))
+def minplus_pallas_gpu(
+    kprev: jnp.ndarray,
+    cost: jnp.ndarray,
+    *,
+    BT: int = GPU_DEFAULT_BT,
+    BW: int = GPU_DEFAULT_BW,
+    interpret: bool = False,
+) -> tuple:
+    """One DP row update: the ``B = 1`` slice of the batched GPU kernel."""
+    kout, iout = _minplus_gpu_call(
+        jnp.asarray(kprev)[None], jnp.asarray(cost)[None], BT, BW, interpret
+    )
+    return kout[0], iout[0]

@@ -30,9 +30,47 @@ from jax.experimental import pallas as pl
 
 from .ref import BIG
 
-__all__ = ["minplus_pallas", "minplus_pallas_batch", "DEFAULT_BT"]
+__all__ = ["minplus_pallas", "minplus_pallas_batch", "tpu_tuned_bt", "DEFAULT_BT"]
 
 DEFAULT_BT = 1024  # 8 sublanes x 128 lanes
+
+TPU_VMEM_BYTES = 16 * 2**20  # per-core VMEM on current TPU generations
+
+
+def tpu_tuned_bt(
+    Tp: int,
+    W: int,
+    vmem_bytes: int = TPU_VMEM_BYTES,
+    fraction: float = 0.75,
+) -> int:
+    """Output-tile size for real TPU hardware, derived from the VMEM budget.
+
+    Per grid program the kernel keeps resident (all float32, so the (8,128)
+    min tile = 1024 elements is the BT granularity):
+
+      * the whole padded previous row: ``4 * (W + Tpad)`` bytes (band reads
+        are in-place dynamic slices of it — no extra window copy),
+      * the cost row: ``4 * W`` bytes,
+      * the value + argmin output tiles: ``8 * BT`` bytes, doubled for
+        pipelining (Pallas double-buffers output blocks across grid steps).
+
+    Picks the LARGEST ``BT`` in {8192, ..., 1024} whose footprint fits in
+    ``fraction`` of VMEM, clamped so the tile never overshoots the padded
+    row (a tile wider than the row just computes discarded outputs) —
+    larger tiles mean fewer grid programs re-reading the row. Rows too
+    long for residency fall back to ``BT = 1024`` (the compiler will
+    spill; a segmented-row layout is future work).
+    """
+    budget = int(vmem_bytes * fraction)
+    row_cap = -(-int(Tp) // DEFAULT_BT) * DEFAULT_BT  # row rounded to tiles
+    for bt in (8192, 4096, 2048, 1024):
+        if bt > max(row_cap, DEFAULT_BT):
+            continue
+        tpad = -(-int(Tp) // bt) * bt
+        resident = 4 * (int(W) + tpad) + 4 * int(W) + 2 * 8 * bt
+        if resident <= budget:
+            return bt
+    return DEFAULT_BT
 
 
 def _minplus_batch_kernel(kprev_pad_ref, cost_ref, kout_ref, iout_ref, *, BT: int, W: int):
@@ -59,23 +97,9 @@ def _minplus_batch_kernel(kprev_pad_ref, cost_ref, kout_ref, iout_ref, *, BT: in
     iout_ref[0, ...] = best_idx
 
 
-@functools.partial(jax.jit, static_argnames=("BT", "interpret"))
-def minplus_pallas_batch(
-    kprev: jnp.ndarray,
-    cost: jnp.ndarray,
-    *,
-    BT: int = DEFAULT_BT,
-    interpret: bool = True,
-) -> tuple:
-    """Batched DP row update via Pallas. Same contract as
-    :func:`repro.kernels.ref.minplus_step_ref_batch`: ``kprev (B, T+1)``,
-    ``cost (B, W)`` -> ``(B, T+1)`` values + int32 argmins.
-
-    One ``(b, ot)`` grid; batch elements are independent, so the grid is
-    embarrassingly parallel across both axes. ``interpret=True`` executes the
-    kernel body in Python on CPU (this container has no TPU); on TPU hardware
-    pass ``interpret=False``.
-    """
+def _minplus_pallas_call(kprev, cost, BT: int, interpret: bool) -> tuple:
+    """Unjitted body shared by both entry points (jit-of-jit would trace a
+    second wrapper per shape for zero caching benefit)."""
     kprev = kprev.astype(jnp.float32)
     cost = cost.astype(jnp.float32)
     B, Tp = kprev.shape
@@ -113,6 +137,26 @@ def minplus_pallas_batch(
 
 
 @functools.partial(jax.jit, static_argnames=("BT", "interpret"))
+def minplus_pallas_batch(
+    kprev: jnp.ndarray,
+    cost: jnp.ndarray,
+    *,
+    BT: int = DEFAULT_BT,
+    interpret: bool = True,
+) -> tuple:
+    """Batched DP row update via Pallas. Same contract as
+    :func:`repro.kernels.ref.minplus_step_ref_batch`: ``kprev (B, T+1)``,
+    ``cost (B, W)`` -> ``(B, T+1)`` values + int32 argmins.
+
+    One ``(b, ot)`` grid; batch elements are independent, so the grid is
+    embarrassingly parallel across both axes. ``interpret=True`` executes the
+    kernel body in Python on CPU (this container has no TPU); on TPU hardware
+    pass ``interpret=False``.
+    """
+    return _minplus_pallas_call(kprev, cost, BT, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("BT", "interpret"))
 def minplus_pallas(
     kprev: jnp.ndarray,
     cost: jnp.ndarray,
@@ -122,7 +166,7 @@ def minplus_pallas(
 ) -> tuple:
     """One DP row update via Pallas: the ``B = 1`` slice of the batched
     kernel. Same contract as :func:`repro.kernels.ref.minplus_step_ref`."""
-    kout, iout = minplus_pallas_batch(
-        jnp.asarray(kprev)[None], jnp.asarray(cost)[None], BT=BT, interpret=interpret
+    kout, iout = _minplus_pallas_call(
+        jnp.asarray(kprev)[None], jnp.asarray(cost)[None], BT, interpret
     )
     return kout[0], iout[0]

@@ -1,37 +1,95 @@
-"""Public jit'd entry points for the kernels package.
+"""Public entry points for the kernels package: per-hardware dispatch.
 
-``minplus_step(kprev, cost, backend=...)`` dispatches between the pure-jnp
-reference (`backend="ref"`, default — runs everywhere) and the Pallas kernel
-(`backend="pallas"`, interpret-mode on CPU; `backend="pallas_tpu"` compiles
-for real TPU hardware).
+``minplus_step(kprev, cost, backend=...)`` / ``minplus_step_batch`` select
+the min-plus implementation. ``backend="auto"`` (the default everywhere —
+``schedule_batch``, ``deadline_sweep``, the sweep engine, FL servers)
+resolves through :data:`DISPATCH_TABLE` keyed on ``jax.default_backend()``:
+
+  platform | backend        | implementation
+  ---------|----------------|------------------------------------------------
+  cpu      | ``blocked``    | tiled jnp (`kernels/blocked.py`) — cache-blocked
+           |                | BT x BW walk, ~4-8x over the dense oracle
+  tpu      | ``pallas_tpu`` | Pallas TPU kernel (`kernels/minplus.py`) with
+           |                | ``BT`` tuned from the real VMEM budget
+  gpu      | ``pallas_gpu`` | Pallas-GPU blocked kernel (`kernels/gpu.py`)
+
+Unknown platforms fall back to ``blocked`` (pure jnp, runs anywhere). The
+dense reference (``backend="ref"``) is retained as the small-shape oracle
+every backend is validated against; ``backend="pallas"`` keeps the
+interpret-mode TPU kernel for CPU-side kernel debugging. Resolution happens
+at Python/trace time (``jax.default_backend()`` is not a traced value), so
+"auto" and its resolved backend share jit caches when callers resolve
+before specializing — see :func:`resolve_backend`.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from .minplus import minplus_pallas, minplus_pallas_batch
+from .blocked import minplus_blocked, minplus_blocked_batch
+from .gpu import minplus_pallas_gpu, minplus_pallas_gpu_batch
+from .minplus import minplus_pallas, minplus_pallas_batch, tpu_tuned_bt
 from .ref import BIG, minplus_step_ref, minplus_step_ref_batch
 
-__all__ = ["minplus_step", "minplus_step_batch", "BIG"]
+__all__ = [
+    "minplus_step",
+    "minplus_step_batch",
+    "resolve_backend",
+    "DISPATCH_TABLE",
+    "BACKENDS",
+    "BIG",
+]
+
+# jax.default_backend() platform -> kernel backend
+DISPATCH_TABLE = {"cpu": "blocked", "tpu": "pallas_tpu", "gpu": "pallas_gpu"}
+
+BACKENDS = ("ref", "blocked", "pallas", "pallas_tpu", "pallas_gpu")
 
 
-def minplus_step(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "ref"):
+def resolve_backend(backend: str | None = "auto") -> str:
+    """Concrete backend name for ``backend`` (``None``/"auto" dispatch per
+    hardware). Callers that use the backend as a jit static argument or a
+    cache key should resolve first so "auto" shares compilations with its
+    resolved name."""
+    if backend is None or backend == "auto":
+        return DISPATCH_TABLE.get(jax.default_backend(), "blocked")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; options: auto, {BACKENDS}")
+    return backend
+
+
+def minplus_step(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "auto"):
+    """One DP row update: ``kprev (T+1,)``, ``cost (W,)``."""
+    backend = resolve_backend(backend)
     if backend == "ref":
         return minplus_step_ref(kprev, cost)
+    if backend == "blocked":
+        return minplus_blocked(kprev, cost)
     if backend == "pallas":
         return minplus_pallas(kprev, cost, interpret=True)
     if backend == "pallas_tpu":
-        return minplus_pallas(kprev, cost, interpret=False)
+        return minplus_pallas(
+            kprev, cost, BT=tpu_tuned_bt(kprev.shape[0], cost.shape[0]), interpret=False
+        )
+    if backend == "pallas_gpu":
+        return minplus_pallas_gpu(kprev, cost, interpret=False)
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def minplus_step_batch(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "ref"):
+def minplus_step_batch(kprev: jnp.ndarray, cost: jnp.ndarray, backend: str = "auto"):
     """Batched row update: ``kprev (B, T+1)``, ``cost (B, W)``."""
+    backend = resolve_backend(backend)
     if backend == "ref":
         return minplus_step_ref_batch(kprev, cost)
+    if backend == "blocked":
+        return minplus_blocked_batch(kprev, cost)
     if backend == "pallas":
         return minplus_pallas_batch(kprev, cost, interpret=True)
     if backend == "pallas_tpu":
-        return minplus_pallas_batch(kprev, cost, interpret=False)
+        return minplus_pallas_batch(
+            kprev, cost, BT=tpu_tuned_bt(kprev.shape[1], cost.shape[1]), interpret=False
+        )
+    if backend == "pallas_gpu":
+        return minplus_pallas_gpu_batch(kprev, cost, interpret=False)
     raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,184 @@
+"""Monotone fast path vs the batched DP (DESIGN.md §13).
+
+Measures the headline claim of the marginal selection kernel at a
+sweep-scale shape (B=8, n=16, T=4096): on increasing-marginal instances the
+batched MarIn selection — O(B·nW·log nW) — replaces the fused O(B·n·T·W)
+(MC)^2MKP program entirely. Written to ``BENCH_marginal.json``:
+
+  * ``speedup_marginal_vs_dp`` — warm best-of-reps fused-DP solve time over
+    warm marginal-path solve time at the same shape, both through
+    :class:`~repro.core.sweep.SweepEngine` bucket executables (what
+    production sweeps actually run). **Gated** at a hard floor of 3.0 in
+    scripts/check_bench.py (floor-only — the ratio swings with box load;
+    measured ~2-3 orders of magnitude on CPU since the DP does ~1000x the
+    flops at this shape).
+  * parity is *enforced*, not just reported: the marginal schedules must be
+    bit-identical to the serial NumPy ``marin`` heap oracle on every
+    instance (cost tables are float32-representable by construction, so the
+    float32 kernel and float64 oracle see the same marginal order), and
+    their float64 objective must match the DP objective to ~f32 precision.
+
+Run as::
+
+    PYTHONPATH=src python benchmarks/bench_marginal.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import Problem, SweepEngine, marin, select_algorithm_batch, total_cost
+
+ACCEPT_B, ACCEPT_N, ACCEPT_T = 8, 16, 4096  # acceptance shape floor
+
+
+def _bench(fn, reps):
+    """Warm best-of-``reps`` seconds (fn must block on its own result)."""
+    fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def make_increasing_problems(rng, B, n, T):
+    """B increasing-marginal instances with integer-valued cost tables:
+    integers are exact in float32 (far below 2^24 here), so the kernel's
+    float32 marginals equal the float64 oracle's bit for bit AND the 1e-9
+    regime tolerance survives packing — no instance silently falls back to
+    the DP (the f32 rounding wobble of smooth superlinear tables would).
+    The heavy integer ties also exercise the heap tie-break parity."""
+    out = []
+    for _ in range(B):
+        # sum U ~ 2T (limits genuinely bind); W = 2T/n stays a power of two
+        # so neither path pays bucket-rounding padding
+        upper = np.full(n, (2 * T) // n - 1)
+        tables = tuple(
+            np.concatenate(
+                [[0.0], np.cumsum(np.sort(rng.integers(1, 1000, size=int(u))))]
+            ).astype(np.float64)
+            for u in upper
+        )
+        out.append(
+            Problem(T=T, lower=np.zeros(n, np.int64), upper=upper, cost_tables=tables)
+        )
+    return out
+
+
+def bench_marginal_vs_dp(B, n, T, reps, check_oracle=True):
+    rng = np.random.default_rng(0)
+    probs = make_increasing_problems(rng, B, n, T)
+    algs = set(select_algorithm_batch(probs))
+    if not algs <= {"marin", "marco"}:
+        raise RuntimeError(
+            f"benchmark instances must dispatch to the selection kernel, got {algs}"
+        )
+    eng = SweepEngine()
+
+    X_fast = eng.solve(probs, split_regimes=True)
+    if check_oracle:
+        # enforced, not asserted: python -O must not strip the parity gate
+        for b, p in enumerate(probs):
+            x_ser = marin(p)
+            if not np.array_equal(X_fast[b, : p.n], x_ser):
+                raise RuntimeError(
+                    f"marginal fast path diverged from the serial MarIn oracle "
+                    f"on instance {b} at B={B} n={n} T={T}"
+                )
+    X_dp = eng.solve(probs)  # split_regimes=False: the fused DP path
+    gap = max(
+        abs(total_cost(p, X_fast[b, : p.n]) - total_cost(p, X_dp[b, : p.n]))
+        / max(1.0, total_cost(p, X_dp[b, : p.n]))
+        for b, p in enumerate(probs)
+    )
+    if gap > 1e-5:
+        raise RuntimeError(f"marginal objective diverged from DP objective: {gap}")
+
+    # both paths warm now (buckets compiled above); time the steady state
+    marginal_s = _bench(lambda: eng.solve(probs, split_regimes=True), reps)
+    dp_s = _bench(lambda: eng.solve(probs), reps)
+    return eng, {
+        "B": B,
+        "n": n,
+        "T": T,
+        "W": int(probs[0].upper.max()) + 1,
+        "dp_solve_s": dp_s,
+        "marginal_solve_s": marginal_s,
+        "speedup_marginal_vs_dp": dp_s / marginal_s,
+        "max_objective_gap": gap,
+    }
+
+
+def bench_mixed_split(eng, B, n, T, reps):
+    """Info metric: a half-monotone half-arbitrary batch through the
+    regime-split path vs all-DP — the realistic mixed-sweep saving (the DP
+    sub-batch shrinks to the arbitrary half; asymptote ~2x here since CPU
+    DP time scales with B). Runs at the acceptance shape: at toy shapes
+    (T*W below ~10^6) the split's extra dispatch overhead outweighs the
+    halved DP and the ratio dips below 1 — see the crossover discussion in
+    DESIGN.md §13."""
+    rng = np.random.default_rng(1)
+    probs = make_increasing_problems(rng, B // 2, n, T)
+    from repro.core import random_problem
+
+    for _ in range(B - B // 2):
+        probs.append(
+            random_problem(
+                rng, n=n, T=T, regime="arbitrary", max_upper=(2 * T) // n - 1, with_lower=False
+            )
+        )
+    eng.solve(probs, split_regimes=True)  # warm the split's DP sub-bucket
+    eng.solve(probs)
+    split_s = _bench(lambda: eng.solve(probs, split_regimes=True), reps)
+    alldp_s = _bench(lambda: eng.solve(probs), reps)
+    return {
+        "mixed_B": B,
+        "mixed_split_solve_s": split_s,
+        "mixed_alldp_solve_s": alldp_s,
+        "speedup_mixed_split_vs_alldp": alldp_s / split_s,
+    }
+
+
+def run_bench(smoke: bool) -> dict:
+    reps = 3 if smoke else 10
+    eng, out = bench_marginal_vs_dp(B=ACCEPT_B, n=ACCEPT_N, T=ACCEPT_T, reps=reps)
+    out.update(bench_mixed_split(eng, B=ACCEPT_B, n=ACCEPT_N, T=ACCEPT_T, reps=reps))
+    return out
+
+
+def run():
+    """Harness entry point (benchmarks.run): CSV rows from one smoke pass."""
+    r = run_bench(smoke=True)
+    return [
+        (
+            f"marginal_fastpath_B{r['B']}_n{r['n']}_T{r['T']}",
+            r["marginal_solve_s"] * 1e6,
+            f"speedup_vs_dp={r['speedup_marginal_vs_dp']:.1f}x",
+        ),
+        (
+            f"mixed_split_B{r['mixed_B']}",
+            r["mixed_split_solve_s"] * 1e6,
+            f"speedup_vs_alldp={r['speedup_mixed_split_vs_alldp']:.2f}x",
+        ),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="fewer reps for CI")
+    ap.add_argument("--out", default="BENCH_marginal.json")
+    args = ap.parse_args()
+    result = run_bench(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

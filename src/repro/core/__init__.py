@@ -17,6 +17,13 @@ from .costs import (
 )
 from .jax_dp import solve_fused_batch_jax, solve_schedule_dp_batch, solve_schedule_dp_jax
 from .marginal import marco, mardec, mardecun, marin
+from .marginal_jax import (
+    marco_batch,
+    mardec_batch,
+    mardecun_batch,
+    marin_batch,
+    select_algorithm_batch,
+)
 from .mc2mkp import (
     ItemClass,
     MC2MKPSolution,
@@ -28,6 +35,7 @@ from .mc2mkp import (
 from .problem import (
     Problem,
     ProblemBatch,
+    classify_regimes,
     remove_lower_limits,
     restore_lower_limits,
     total_cost,
@@ -48,6 +56,7 @@ from .sweep import (
     default_engine,
     make_sweep_mesh,
     solve_dp_batch_cached,
+    solve_schedule_batch_cached,
 )
 
 __all__ = [
@@ -72,6 +81,13 @@ __all__ = [
     "marco",
     "mardecun",
     "mardec",
+    "marin_batch",
+    "marco_batch",
+    "mardecun_batch",
+    "mardec_batch",
+    "classify_regimes",
+    "select_algorithm_batch",
+    "solve_schedule_batch_cached",
     "olar",
     "uniform",
     "proportional",

@@ -9,9 +9,10 @@
     (1 / marginal cost at 1 task), the common linear-cost heuristic
     of refs [16]-[22].
   - :func:`random_schedule` — random feasible assignment.
-  - :func:`greedy_marginal` — MarIn applied regardless of regime (optimal
-    only for increasing marginals; a useful "naive greedy" foil for the
-    Section 3.1 insight that greedy fails in general).
+  - :func:`greedy_marginal` — MarIn's greedy rule applied regardless of
+    regime (optimal when marginals are non-decreasing, unreliable otherwise;
+    a "naive greedy" foil for the Section 3.1 insight that greedy fails in
+    general).
 
 Every baseline returns a *valid* schedule (respects limits, sums to T) so
 energy comparisons are apples-to-apples.
@@ -99,5 +100,15 @@ def random_schedule(problem: Problem, rng: np.random.Generator) -> np.ndarray:
 
 
 def greedy_marginal(problem: Problem) -> np.ndarray:
-    """MarIn run on any instance — optimal iff marginals are increasing."""
+    """The naive-greedy baseline: MarIn's smallest-next-marginal rule applied
+    unconditionally, with NO regime check.
+
+    Guaranteed optimal only when every marginal-cost function is
+    non-decreasing (the MarIn regime, paper Theorem 2 — where it IS MarIn);
+    on other instances it may coincidentally land on an optimum but can be
+    arbitrarily bad (the Section 3.1 counterexamples). Kept as a named
+    baseline so benchmarks can show greedy failing where the DP does not —
+    ``schedule(algorithm="auto")`` never dispatches here, it routes through
+    the shared regime detector (:func:`repro.core.scheduler.select_algorithm`).
+    """
     return marin(problem)

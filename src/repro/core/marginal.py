@@ -98,12 +98,18 @@ def marco(p: Problem) -> np.ndarray:
 @_with_lower_limit_removal
 def mardecun(p: Problem) -> np.ndarray:
     """Decreasing marginals, no (binding) upper limits: all tasks go to the
-    single resource with minimal C_i(T). Θ(n)."""
-    if np.any(p.upper < p.T):
-        raise ValueError("MarDecUn requires U_i >= T for all resources")
+    single resource with minimal C_i(T). Θ(n).
+
+    Zero-capacity resources (``U_i == 0`` after lower-limit removal — e.g.
+    dropped-out clients, or inert batch padding) can never take a task, so
+    they neither trigger the guard nor join the argmin; this keeps the
+    dispatch rule padding-invariant and identical to the batched
+    :func:`repro.core.marginal_jax.mardecun_batch`."""
+    if np.any((p.upper > 0) & (p.upper < p.T)):
+        raise ValueError("MarDecUn requires U_i >= T for all resources with capacity")
     n = len(p.cost_tables)
     x = np.zeros(n, dtype=np.int64)
-    k = min(range(n), key=lambda i: p.cost_tables[i][p.T])
+    k = min((i for i in range(n) if p.upper[i] >= p.T), key=lambda i: p.cost_tables[i][p.T])
     x[k] = p.T
     return x
 

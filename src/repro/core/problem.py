@@ -26,6 +26,7 @@ __all__ = [
     "Problem",
     "ProblemBatch",
     "Schedule",
+    "classify_regimes",
     "remove_lower_limits",
     "restore_lower_limits",
     "total_cost",
@@ -37,6 +38,47 @@ __all__ = [
 # Large-but-finite stand-in for +inf in dense packed tables (mirrors
 # repro.kernels.ref.BIG; duplicated here so core carries no kernel import).
 PACK_BIG = 1e30
+
+
+def classify_regimes(costs, lower, upper, atol: float = 1e-9) -> np.ndarray:
+    """Vectorized marginal-cost regime classification (paper Definition 3).
+
+    THE single source of truth for regime detection: ``Problem.regime``,
+    ``ProblemBatch.regimes``, and the scheduler's serial AND batched
+    algorithm dispatch all route through here, so the two dispatch paths can
+    never disagree (DESIGN.md §13).
+
+    Args:
+      costs: ``(B, n, W)`` dense packed tables (entries beyond each ``U_i``
+        may hold anything — they are masked out).
+      lower/upper: ``(B, n)`` limits.
+
+    Returns a ``(B,)`` array of ``'increasing' | 'constant' | 'decreasing' |
+    'arbitrary'`` strings. A resource contributes the marginal comparisons
+    ``M_i(j)`` vs ``M_i(j+1)`` for ``j`` in ``[L_i+1, U_i-1]``; resources
+    with fewer than two marginals (``U_i - L_i < 2`` — including padded
+    phantom resources) contribute nothing, so classification is invariant
+    under the inert batch padding of :meth:`ProblemBatch.pad_to`.
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    lower = np.asarray(lower, dtype=np.int64)
+    upper = np.asarray(upper, dtype=np.int64)
+    B, n, W = costs.shape
+    if W < 3:  # no resource can have two marginals
+        return np.full(B, "constant", dtype=object)
+    d1 = costs[:, :, 1:] - costs[:, :, :-1]  # d1[..., j-1] = M(j)
+    d2 = d1[:, :, 1:] - d1[:, :, :-1]  # d2[..., j-1] = M(j+1) - M(j)
+    j = np.arange(1, W - 1)[None, None, :]
+    valid = (j >= lower[:, :, None] + 1) & (j + 1 <= upper[:, :, None])
+    d2 = np.where(valid, d2, 0.0)
+    inc = ~np.any(d2 < -atol, axis=(1, 2))
+    con = ~np.any(np.abs(d2) > atol, axis=(1, 2))
+    dec = ~np.any(d2 > atol, axis=(1, 2))
+    out = np.full(B, "arbitrary", dtype=object)
+    out[dec] = "decreasing"
+    out[inc] = "increasing"
+    out[con] = "constant"  # constant wins over increasing/decreasing
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,27 +167,15 @@ class Problem:
 
     def regime(self, atol: float = 1e-9) -> str:
         """Classifies marginal-cost behaviour: 'increasing' | 'constant' |
-        'decreasing' | 'arbitrary' (paper Definition 3)."""
-        inc = con = dec = True
-        for i in range(self.n):
-            lo, up = int(self.lower[i]), int(self.upper[i])
-            if up - lo < 2:
-                continue  # fewer than two marginals: consistent with anything
-            m = self.marginal_costs(i)[lo + 1 : up + 1]
-            d = np.diff(m)
-            if np.any(d < -atol):
-                inc = False
-            if np.any(np.abs(d) > atol):
-                con = False
-            if np.any(d > atol):
-                dec = False
-        if con:
-            return "constant"
-        if inc:
-            return "increasing"
-        if dec:
-            return "decreasing"
-        return "arbitrary"
+        'decreasing' | 'arbitrary' (paper Definition 3). Delegates to the
+        vectorized :func:`classify_regimes` — the same code the batched
+        dispatch runs, so serial and batched regime detection agree by
+        construction."""
+        W = int(self.upper.max()) + 1
+        costs = np.full((1, self.n, W), PACK_BIG, dtype=np.float64)
+        for i, tbl in enumerate(self.cost_tables):
+            costs[0, i, : len(tbl)] = tbl
+        return str(classify_regimes(costs, self.lower[None], self.upper[None], atol)[0])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,6 +284,12 @@ class ProblemBatch:
         costs[:, :, 0] = 0.0  # phantoms: only x=0, at zero cost
         costs[: self.B, : self.n, : self.W] = self.costs
         return ProblemBatch(T=T, lower=lower, upper=upper, costs=costs)
+
+    def regimes(self, atol: float = 1e-9) -> np.ndarray:
+        """Per-instance marginal-cost regimes, ``(B,)`` strings — the batched
+        counterpart of :meth:`Problem.regime` (same :func:`classify_regimes`
+        core, so ``batch.regimes()[b] == batch.instance(b).regime()``)."""
+        return classify_regimes(self.costs, self.lower, self.upper, atol)
 
     def instance(self, b: int) -> "Problem":
         """Materializes instance ``b`` as a standalone :class:`Problem`

@@ -23,9 +23,10 @@ import numpy as np
 from . import baselines
 from .jax_dp import solve_schedule_dp_jax
 from .marginal import marco, mardec, mardecun, marin
+from .marginal_jax import select_algorithm_batch
 from .mc2mkp import solve_schedule_dp
 from .problem import Problem, total_cost, validate_schedule
-from .sweep import solve_dp_batch_cached
+from .sweep import solve_dp_batch_cached, solve_schedule_batch_cached
 
 __all__ = [
     "schedule",
@@ -33,6 +34,7 @@ __all__ = [
     "deadline_sweep",
     "ALGORITHMS",
     "select_algorithm",
+    "select_algorithm_batch",
 ]
 
 # algorithm names that run the (MC)^2MKP DP — in the batched entry point all
@@ -56,15 +58,12 @@ ALGORITHMS: Dict[str, Callable] = {
 
 
 def select_algorithm(problem: Problem) -> str:
-    regime = problem.regime()
-    unlimited = bool(np.all(problem.upper - problem.lower >= problem.T - int(problem.lower.sum())))
-    if regime == "increasing":
-        return "marin"
-    if regime == "constant":
-        return "mardecun" if unlimited else "marco"
-    if regime == "decreasing":
-        return "mardecun" if unlimited else "mardec"
-    return "dp"
+    """Lowest-complexity optimal algorithm for ``problem``'s regime (paper
+    Table 2). The ``B = 1`` slice of
+    :func:`~repro.core.marginal_jax.select_algorithm_batch` — one shared
+    regime-detection + dispatch rule, so serial and batched "auto" can
+    never disagree (DESIGN.md §13)."""
+    return select_algorithm_batch([problem])[0]
 
 
 def schedule(problem: Problem, algorithm: str = "auto", check: bool = True) -> np.ndarray:
@@ -87,16 +86,17 @@ def schedule_batch(
     backend=None,
     engine=None,
 ):
-    """Solves ``B`` instances, batching every DP solve into ONE jitted
-    min-plus program (DESIGN.md §9) routed through the sweep engine's
+    """Solves ``B`` instances, batching every solve into regime-wide jitted
+    programs (DESIGN.md §9/§13) routed through the sweep engine's
     shape-bucketed compile cache (§10).
 
     Dispatch mirrors :func:`schedule`:
-      * ``algorithm="auto"``: each instance's regime is detected; instances
-        with a marginal-algorithm regime (MarIn/MarCo/MarDec/MarDecUn — all
-        Θ(n log n) or better, cheaper than any batching win) are solved
-        per-instance, and the remaining arbitrary-regime instances are
-        stacked into one batched DP call.
+      * ``algorithm="auto"``: the engine's regime-split path — each
+        instance's regime picks its algorithm (one shared rule with the
+        serial dispatch), MarIn/MarCo instances ride the batched marginal
+        selection kernel (§13), MarDecUn/MarDec solve on the host, and only
+        the arbitrary-regime remainder pays the batched DP; results come
+        back in original problem order.
       * any DP algorithm name (``dp``, ``dp_jax``, ``dp_batch``,
         ``dp_jax_pallas``): ALL instances go through the batched DP
         (``dp_jax_pallas`` selects the Pallas kernel backend).
@@ -118,12 +118,9 @@ def schedule_batch(
     out = [None] * len(problems)
     dp_idx = []
     if algorithm == "auto":
+        X = solve_schedule_batch_cached(problems, backend=backend, engine=engine)
         for b, p in enumerate(problems):
-            alg = select_algorithm(p)
-            if alg == "dp":
-                dp_idx.append(b)
-            else:
-                out[b] = ALGORITHMS[alg](p)
+            out[b] = np.asarray(X[b, : p.n], dtype=np.int64)
     elif algorithm in _DP_ALGORITHMS:
         dp_idx = list(range(len(problems)))
         if algorithm == "dp_jax_pallas":

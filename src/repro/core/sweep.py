@@ -27,6 +27,12 @@ engine:
 counted by a trace-time side effect, so it reflects actual XLA tracings
 (one per bucket entry), not just cache misses.
 
+Regime-split solves (``split_regimes=True``, DESIGN.md §13) add a second
+executable kind to the same LRU: ``("marginal", B, n, W)`` buckets hold the
+jitted MarIn/MarCo selection kernel (no ``T`` in the key — workloads are
+traced inputs there), so monotone slices of a sweep warm independently of
+the DP buckets while sharing one cache budget and one set of counters.
+
 The engine is thread-safe (cache and counters are lock-guarded) and, beyond
 the blocking :meth:`SweepEngine.solve`, offers :meth:`SweepEngine.dispatch`:
 the bucket executable is *launched* (JAX async dispatch, no
@@ -50,9 +56,20 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..kernels.ops import resolve_backend
 from .jax_dp import _solve_fused_batch, pack_problem
-from .problem import ProblemBatch, remove_lower_limits, restore_lower_limits
+from .marginal_jax import (
+    MARGINAL_BATCH_ALGORITHMS,
+    marginal_select,
+    select_algorithm_batch,
+)
+from .problem import (
+    ProblemBatch,
+    remove_lower_limits,
+    restore_lower_limits,
+    total_cost_batch,
+)
 
 __all__ = [
+    "RegimeSplitHandle",
     "SweepEngine",
     "SweepHandle",
     "bucket_shape",
@@ -60,6 +77,7 @@ __all__ = [
     "make_sweep_mesh",
     "reset_default_engines",
     "solve_dp_batch_cached",
+    "solve_schedule_batch_cached",
 ]
 
 
@@ -86,26 +104,15 @@ def make_sweep_mesh(axis: str = "sweep"):
     return jax.make_mesh((len(devices),), (axis,))
 
 
-class SweepHandle:
-    """An in-flight batched solve: the bucket executable has been dispatched
-    (JAX async dispatch — no ``block_until_ready`` issued), but the schedule
-    is not yet on the host. :meth:`result` blocks on the device transfer,
-    unpads, and restores lower limits; repeated calls return the same array.
+class _DeviceSchedulePart:
+    """Launch/materialize seam shared by the DP and selection-kernel
+    handles: a padded ``(Bb, nb)`` schedule array still computing on the
+    device, plus the ORIGINAL (unpadded) batch to unpad against."""
 
-    The fused executable (DESIGN.md §12) also returns the final DP row:
-    :meth:`k_last` / :meth:`objectives` expose it without any extra
-    dispatch. Both are in 0-lower-limit terms (Section 5.2) — add each
-    instance's fixed cost ``sum_i C_i(L_i)`` to recover original-instance
-    energies.
-    """
-
-    def __init__(self, raw, k_last, batch, t_star):
+    def __init__(self, raw, batch):
         self._raw = raw  # (Bb, nb) device array, still possibly computing
-        self._k_last = k_last  # (Bb, Tb+1) final DP row, also in flight
         self._batch = batch  # the ORIGINAL (unpadded) ProblemBatch
-        self._t_star = t_star  # (Bb,) filled capacities of the padded batch
         self._out: Optional[np.ndarray] = None
-        self._k_host: Optional[np.ndarray] = None  # cached k_last transfer
 
     def done(self) -> bool:
         """True once the device computation has finished (best-effort: jax
@@ -122,6 +129,26 @@ class SweepHandle:
             X0 = np.asarray(jax.device_get(self._raw))[: self._batch.B, : self._batch.n]
             self._out = restore_lower_limits(self._batch, X0.astype(np.int64))
         return self._out
+
+
+class SweepHandle(_DeviceSchedulePart):
+    """An in-flight batched solve: the bucket executable has been dispatched
+    (JAX async dispatch — no ``block_until_ready`` issued), but the schedule
+    is not yet on the host. :meth:`result` blocks on the device transfer,
+    unpads, and restores lower limits; repeated calls return the same array.
+
+    The fused executable (DESIGN.md §12) also returns the final DP row:
+    :meth:`k_last` / :meth:`objectives` expose it without any extra
+    dispatch. Both are in 0-lower-limit terms (Section 5.2) — add each
+    instance's fixed cost ``sum_i C_i(L_i)`` to recover original-instance
+    energies.
+    """
+
+    def __init__(self, raw, k_last, batch, t_star):
+        super().__init__(raw, batch)
+        self._k_last = k_last  # (Bb, Tb+1) final DP row, also in flight
+        self._t_star = t_star  # (Bb,) filled capacities of the padded batch
+        self._k_host: Optional[np.ndarray] = None  # cached k_last transfer
 
     def k_last(self) -> np.ndarray:
         """The ``(B, T_bucket+1)`` final DP row of the real instances:
@@ -140,6 +167,80 @@ class SweepHandle:
         k = self.k_last()
         t = np.asarray(self._t_star)
         return k[np.arange(self._batch.B), t[: self._batch.B]]
+
+
+class _SelectionPart(_DeviceSchedulePart):
+    """An in-flight batched marginal-selection solve (MarIn/MarCo slice of a
+    regime-split dispatch): like :class:`SweepHandle`, the jitted kernel has
+    been launched async and :meth:`result` blocks, unpads, and restores
+    lower limits."""
+
+    def __init__(self, raw_x, raw_obj, batch):
+        super().__init__(raw_x, batch)
+        self._raw_obj = raw_obj  # (Bb,) float32 0-lower-limit objectives
+
+    def objectives(self) -> np.ndarray:
+        return np.asarray(jax.device_get(self._raw_obj), np.float64)[: self._batch.B]
+
+
+class _HostPart:
+    """An already-materialized host-solved slice (MarDecUn argmin /
+    MarDec packing enumeration) of a regime-split dispatch."""
+
+    def __init__(self, X, obj):
+        self._X = X
+        self._obj = obj
+
+    def done(self) -> bool:
+        return True
+
+    def result(self) -> np.ndarray:
+        return self._X
+
+    def objectives(self) -> np.ndarray:
+        return self._obj
+
+
+class RegimeSplitHandle:
+    """A mixed-regime in-flight solve: each regime sub-batch ran on its own
+    path (selection kernel / host marginal algorithms / fused DP) and this
+    handle reassembles rows in the ORIGINAL problem order.
+
+    :meth:`objectives` returns per-instance 0-lower-limit objectives (same
+    convention as :meth:`SweepHandle.objectives`; device-solved entries are
+    float32-precise). :meth:`k_last` is undefined — only the fused DP
+    produces a full final row, and pure-DP dispatches return a plain
+    :class:`SweepHandle` which does expose it.
+    """
+
+    def __init__(self, B: int, n: int, parts):
+        self._B, self._n = B, n
+        self._parts = parts  # list of (original-index list, part/handle)
+        self._out: Optional[np.ndarray] = None
+
+    def done(self) -> bool:
+        return self._out is not None or all(p.done() for _, p in self._parts)
+
+    def result(self) -> np.ndarray:
+        if self._out is None:
+            X = np.zeros((self._B, self._n), dtype=np.int64)
+            for idx, part in self._parts:
+                X[idx] = part.result()
+            self._out = X
+        return self._out
+
+    def objectives(self) -> np.ndarray:
+        obj = np.zeros(self._B, dtype=np.float64)
+        for idx, part in self._parts:
+            obj[idx] = np.asarray(part.objectives(), np.float64)
+        return obj
+
+    def k_last(self) -> np.ndarray:
+        raise ValueError(
+            "k_last() is only defined for pure-DP dispatches (the fused DP's "
+            "final row); this batch was regime-split — use objectives(), or "
+            "dispatch with split_regimes=False for the full Pareto row"
+        )
 
 
 class SweepEngine:
@@ -217,8 +318,19 @@ class SweepEngine:
             return fn
 
     def _build(self, key):
-        _, _, Tb, _ = key
         backend = self.backend
+        if key[0] == "marginal":
+
+            def run_sel(costs, upper, t_star):
+                with self._lock:
+                    self._compiles += 1
+                # monotone fast path (DESIGN.md §13): top-T' marginal-unit
+                # selection — no DP table, O(B·nW·log nW)
+                return marginal_select(costs, upper, t_star)
+
+            return jax.jit(run_sel)
+
+        _, _, _, Tb, _ = key
 
         def run(costs, t_star):
             # Trace-time side effect: executes once per XLA compilation of
@@ -234,20 +346,7 @@ class SweepEngine:
 
     # ---- solving -------------------------------------------------------
 
-    def dispatch(self, problems) -> SweepHandle:
-        """Launches the batched solve WITHOUT materializing the result.
-
-        Packing/padding happens eagerly (cheap numpy), the bucket executable
-        is invoked once — JAX async dispatch returns immediately with the
-        computation in flight — and the returned :class:`SweepHandle` does
-        the blocking ``device_get`` only on :meth:`SweepHandle.result`, so
-        a caller can keep working while the solve computes."""
-        batch = (
-            problems
-            if isinstance(problems, ProblemBatch)
-            else ProblemBatch.from_problems(problems)
-        )
-        batch.validate()
+    def _dispatch_dp(self, batch: ProblemBatch) -> SweepHandle:
         b0 = remove_lower_limits(batch)
         Tmax = int(b0.T.max())
         Bb, nb, Tb, Wb = bucket_shape(b0.B, b0.n, Tmax, b0.W)
@@ -264,16 +363,115 @@ class SweepEngine:
             t_star = jax.device_put(
                 t_star, NamedSharding(self.mesh, P(self.mesh_axis))
             )
-        fn = self._entry((Bb, nb, Tb, Wb))
+        fn = self._entry(("dp", Bb, nb, Tb, Wb))
         X_raw, k_last = fn(costs, t_star)
         return SweepHandle(X_raw, k_last, batch, np.asarray(padded.T, dtype=np.int32))
 
-    def solve(self, problems) -> np.ndarray:
+    def _dispatch_selection(self, batch: ProblemBatch) -> _SelectionPart:
+        """Launches the MarIn/MarCo slice on the jitted selection kernel
+        from its own shape bucket (``("marginal", B, n, W)`` — no ``T`` in
+        the key: the workload is a traced input, not a shape). Marginal
+        buckets share the engine's LRU and counters with the DP buckets.
+        Inputs are not mesh-sharded: selection solves are orders of
+        magnitude smaller than the DPs they replace."""
+        b0 = remove_lower_limits(batch)
+        if b0.W < 2:  # every resource pinned at its lower limit: T' == 0
+            zeros = np.zeros((batch.B, batch.n), dtype=np.int64)
+            return _HostPart(
+                restore_lower_limits(batch, zeros), np.zeros(batch.B)
+            )
+        Bb, nb, _, Wb = bucket_shape(b0.B, b0.n, 1, b0.W)
+        padded = b0.pad_to(B=Bb, n=nb, W=Wb)
+        fn = self._entry(("marginal", Bb, nb, Wb))
+        x_raw, obj_raw = fn(
+            pack_problem(padded),
+            jnp.asarray(padded.upper, jnp.int32),
+            jnp.asarray(padded.T, jnp.int32),
+        )
+        return _SelectionPart(x_raw, obj_raw, batch)
+
+    @staticmethod
+    def _host_part(batch: ProblemBatch, algorithm: str) -> _HostPart:
+        """MarDecUn / MarDec slice: solved eagerly on the host (numpy) at
+        dispatch time."""
+        X = MARGINAL_BATCH_ALGORITHMS[algorithm](batch)
+        b0 = remove_lower_limits(batch)
+        obj = total_cost_batch(b0, X - batch.lower)
+        return _HostPart(X, obj)
+
+    @staticmethod
+    def _take(batch: ProblemBatch, idx) -> ProblemBatch:
+        """Row-slices a batch, keeping the (n, W) envelope — padding is
+        inert on every path, so sub-batch solves are bit-identical to
+        solving the instances alone."""
+        idx = np.asarray(idx, dtype=np.int64)
+        return ProblemBatch(
+            T=batch.T[idx],
+            lower=batch.lower[idx],
+            upper=batch.upper[idx],
+            costs=batch.costs[idx],
+        )
+
+    def dispatch(self, problems, split_regimes: bool = False):
+        """Launches the batched solve WITHOUT materializing the result.
+
+        Packing/padding happens eagerly (cheap numpy), the bucket executable
+        is invoked once — JAX async dispatch returns immediately with the
+        computation in flight — and the returned :class:`SweepHandle` does
+        the blocking ``device_get`` only on :meth:`SweepHandle.result`, so
+        a caller can keep working while the solve computes.
+
+        ``split_regimes=True`` enables the monotone fast path (DESIGN.md
+        §13): each instance's marginal-cost regime picks its algorithm
+        (paper Table 2, via
+        :func:`~repro.core.marginal_jax.select_algorithm_batch`), the batch
+        is partitioned into per-algorithm sub-batches (MarIn/MarCo ->
+        selection kernel, MarDecUn/MarDec -> host numpy, arbitrary -> fused
+        DP), and a :class:`RegimeSplitHandle` reassembles rows in original
+        order — bit-identical to dispatching each sub-batch alone. Batches
+        that classify as pure-DP take exactly the default path (same
+        buckets, same counters, plain :class:`SweepHandle`). The default
+        ``False`` keeps the documented contract of bit-identity with
+        :func:`~repro.core.jax_dp.solve_schedule_dp_batch` for every
+        instance. MarDec sub-batches compute at dispatch time (host code
+        has no async seam)."""
+        batch = (
+            problems
+            if isinstance(problems, ProblemBatch)
+            else ProblemBatch.from_problems(problems)
+        )
+        batch.validate()
+        if not split_regimes:
+            return self._dispatch_dp(batch)
+        algs = select_algorithm_batch(batch)
+        groups: dict = {}
+        for b, alg in enumerate(algs):
+            key = "selection" if alg in ("marin", "marco") else alg
+            groups.setdefault(key, []).append(b)
+        if set(groups) == {"dp"}:
+            return self._dispatch_dp(batch)
+        parts = []
+        # DP first: its executable is the slowest, let it compute while the
+        # host parts run
+        if "dp" in groups:
+            parts.append((groups["dp"], self._dispatch_dp(self._take(batch, groups["dp"]))))
+        if "selection" in groups:
+            parts.append(
+                (groups["selection"], self._dispatch_selection(self._take(batch, groups["selection"])))
+            )
+        for alg in ("mardecun", "mardec"):
+            if alg in groups:
+                parts.append((groups[alg], self._host_part(self._take(batch, groups[alg]), alg)))
+        return RegimeSplitHandle(batch.B, batch.n, parts)
+
+    def solve(self, problems, split_regimes: bool = False) -> np.ndarray:
         """Drop-in for :func:`~repro.core.jax_dp.solve_schedule_dp_batch`:
         same inputs (sequence of :class:`Problem` or a prebuilt
         :class:`ProblemBatch`), bit-identical ``(B, n)`` int64 schedules —
-        but warm buckets skip compilation entirely."""
-        return self.dispatch(problems).result()
+        but warm buckets skip compilation entirely. With
+        ``split_regimes=True``, monotone instances ride the marginal fast
+        path instead of the DP (see :meth:`dispatch`)."""
+        return self.dispatch(problems, split_regimes=split_regimes).result()
 
 
 # ---------------------------------------------------------------------------
@@ -321,3 +519,21 @@ def solve_dp_batch_cached(
             )
         return engine.solve(problems)
     return default_engine(backend or "auto").solve(problems)
+
+
+def solve_schedule_batch_cached(
+    problems, backend: Optional[str] = None, engine=None
+) -> np.ndarray:
+    """Regime-dispatched batched solve through a sweep engine (DESIGN.md
+    §13): monotone instances ride the marginal fast path, only
+    arbitrary-regime instances pay the DP. Same engine/backend conventions
+    (and conflict check) as :func:`solve_dp_batch_cached`; returns
+    ``(B, n)`` int64 schedules in original problem order."""
+    if engine is not None:
+        if backend is not None and resolve_backend(backend) != engine.backend:
+            raise ValueError(
+                f"backend {backend!r} conflicts with engine.backend "
+                f"{engine.backend!r}; pass an engine built for that backend"
+            )
+        return engine.solve(problems, split_regimes=True)
+    return default_engine(backend or "auto").solve(problems, split_regimes=True)

@@ -12,7 +12,11 @@ a *plan executor* that decides WHERE planning tasks run:
     what-if scenario batch and round *r+1*'s schedule through the shared
     :class:`~repro.core.sweep.SweepEngine` (via its non-blocking
     ``dispatch``), so no DP solve ever issues a ``block_until_ready`` on the
-    round hot path.
+    round hot path. Scenario batches are regime-split (DESIGN.md §13):
+    monotone-cost what-ifs resolve on the marginal fast path in
+    O(B·nW·log nW), so with monotone energy models the planner's per-round
+    work shrinks by the full DP factor — the pipeline then hides estimator
+    bookkeeping rather than heavyweight solves.
 
 Every task is handed back as a :class:`PlanFuture`; results materialize only
 when the next round actually needs them (``PlanFuture.result()``).

@@ -246,13 +246,17 @@ class FederatedServer:
         return problems, labels
 
     def solve_scenarios(self, problems, labels) -> Optional[ScenarioReport]:
-        """Evaluates the snapshotted what-ifs with ONE batched DP solve
-        through the engine (the pipelined campaign runs this whole stage on
-        the planner thread); returns None when no scenarios are
-        configured."""
+        """Evaluates the snapshotted what-ifs with ONE regime-split batched
+        solve through the engine (the pipelined campaign runs this whole
+        stage on the planner thread); returns None when no scenarios are
+        configured. Scenarios whose estimated cost tables are monotone —
+        e.g. dropout/deadline what-ifs over a linear or DVFS-superlinear
+        energy fleet — ride the marginal fast path (DESIGN.md §13) instead
+        of paying the pseudo-polynomial DP; arbitrary-regime scenarios
+        still batch into the fused DP."""
         if not problems:
             return None
-        X = self.engine.solve(problems)[:, : self.n_clients]
+        X = self.engine.solve(problems, split_regimes=True)[:, : self.n_clients]
         energies = np.array(
             [total_cost(p, X[b]) for b, p in enumerate(problems)], dtype=np.float64
         )

@@ -112,7 +112,7 @@ def test_pipeline_stats_observability():
 
 
 class _BoomEngine(SweepEngine):
-    def dispatch(self, problems):
+    def dispatch(self, problems, split_regimes=False):
         raise RuntimeError("boom: scenario solve exploded")
 
 

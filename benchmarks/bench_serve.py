@@ -1,0 +1,201 @@
+"""Served-traffic benchmark: the scheduler service under a request stream
+(DESIGN.md §14).
+
+Drives a seeded Poisson arrival stream of mixed-shape, mixed-regime
+scheduling requests through :class:`repro.serve.SchedulerService` and
+answers three questions, written to ``BENCH_serve.json``:
+
+  * **batching speedup** — wall time to serve N requests coalesced vs
+    dispatching each alone through the same warm engine, in arrival order.
+    Headline ``speedup_coalesced_vs_serial`` (CI floor: >= 2x).
+  * **served throughput** — ``throughput_rps`` under saturation (requests
+    submitted back-to-back), with a conservative CI floor.
+  * **served latency** — p50/p99 request latency under a PACED Poisson
+    stream at half the saturated service rate (info-only: latency in
+    milliseconds swings with box load).
+
+Correctness is enforced in-bench (a violation crashes the smoke, which
+fails CI):
+
+  * every coalesced result is bit-identical to solving that request alone;
+  * after ``warm()`` covers the stream's buckets, steady-state serving
+    performs ZERO fresh XLA tracings (``steady_state_compiles == 0``) —
+    across both the saturation and the paced legs.
+
+Run as::
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+# Request families: (n, T range, upper range) pinned so each family lands
+# in exactly ONE pow2 bucket (the widest resource is forced to u_hi, T stays
+# inside one pow2 interval, lower limits are 0) — the hot-bucket traffic
+# shape the warm() API is for. Regimes cycle per request, so streams mix
+# DP-regime and monotone-cost instances.
+FAMILIES = (
+    dict(n=8, T_lo=65, T_hi=128, u_lo=16, u_hi=31),  # bucket (8, 128, 32)
+    dict(n=16, T_lo=33, T_hi=64, u_lo=4, u_hi=15),  # bucket (16, 64, 16)
+    dict(n=4, T_lo=65, T_hi=128, u_lo=32, u_hi=63),  # bucket (4, 128, 64)
+)
+REGIMES = ("arbitrary", "linear", "increasing", "decreasing")
+
+
+def _family_problem(rng, fam, regime):
+    from repro.core import Problem
+    from repro.core.costs import (
+        linear_cost,
+        measured_cost,
+        sublinear_cost,
+        superlinear_cost,
+    )
+
+    n = fam["n"]
+    upper = rng.integers(fam["u_lo"], fam["u_hi"] + 1, size=n)
+    upper[0] = fam["u_hi"]  # pin the table width -> one W bucket per family
+    T = int(min(rng.integers(fam["T_lo"], fam["T_hi"] + 1), upper.sum()))
+    tables = []
+    for u in (int(v) for v in upper):
+        if regime == "arbitrary":
+            tables.append(measured_cost(u, rng))
+        elif regime == "linear":
+            tables.append(linear_cost(u, float(rng.uniform(0.2, 5.0))))
+        elif regime == "increasing":
+            tables.append(superlinear_cost(u, float(rng.uniform(0.2, 3.0)), float(rng.uniform(0.01, 0.6))))
+        else:
+            tables.append(sublinear_cost(u, float(rng.uniform(5.0, 40.0)), float(rng.uniform(2.0, 20.0))))
+    return Problem(T=T, lower=np.zeros(n, dtype=np.int64), upper=upper, cost_tables=tuple(tables))
+
+
+def make_requests(rng, N):
+    out = []
+    for i in range(N):
+        fam = FAMILIES[int(rng.integers(len(FAMILIES)))]
+        out.append(_family_problem(rng, fam, REGIMES[i % len(REGIMES)]))
+    return out
+
+
+def run_bench(N: int, max_batch: int, max_delay_s: float, seed: int = 0) -> dict:
+    from repro.core import ProblemBatch, SweepEngine
+    from repro.core.sweep import request_bucket
+    from repro.serve import SchedulerService
+
+    rng = np.random.default_rng(seed)
+    requests = make_requests(rng, N)
+    batches = [ProblemBatch.from_problems([p]) for p in requests]
+    buckets = sorted(set(request_bucket(b) for b in batches))
+
+    engine = SweepEngine()
+    service = SchedulerService(
+        engine=engine, max_batch=max_batch, max_delay_s=max_delay_s, max_pending=4 * N
+    )
+    t0 = time.perf_counter()
+    warm_traces = service.warm(buckets)
+    warm_s = time.perf_counter() - t0
+
+    # ---- serial baseline: one request, one dispatch, in arrival order ----
+    compiles0 = engine.cache_stats()["compiles"]
+    t0 = time.perf_counter()
+    X_serial = [engine.dispatch(b).result()[0] for b in batches]
+    serial_total_s = time.perf_counter() - t0
+
+    # ---- saturation leg: everything submitted back-to-back ---------------
+    t0 = time.perf_counter()
+    futs = [service.submit(b) for b in batches]
+    X_served = [f.result(timeout=120) for f in futs]
+    coalesced_total_s = time.perf_counter() - t0
+    sat_stats = service.stats()
+
+    for i, (xs, xc) in enumerate(zip(X_serial, X_served)):
+        assert np.array_equal(xs, xc[0]), f"request {i}: coalesced != solved-alone"
+
+    # ---- paced leg: Poisson arrivals at half the saturated rate ----------
+    sat_rps = N / coalesced_total_s
+    rate_hz = max(sat_rps / 2.0, 1.0)
+    gaps = rng.exponential(1.0 / rate_hz, size=N)
+    t0 = time.perf_counter()
+    paced = []
+    for b, gap in zip(batches, gaps):
+        time.sleep(gap)
+        paced.append(service.submit(b))
+    for f in paced:
+        f.result(timeout=120)
+    paced_total_s = time.perf_counter() - t0
+    lat_ms = np.array(
+        [(f.completed_at - f.submitted_at) * 1e3 for f in paced], dtype=np.float64
+    )
+
+    steady_compiles = engine.cache_stats()["compiles"] - compiles0
+    assert steady_compiles == 0, (
+        f"{steady_compiles} cold XLA traces during steady-state serving "
+        f"(warm() should have covered every bucket)"
+    )
+    stats = service.stats()
+    service.close()
+
+    return {
+        "requests": N,
+        "buckets": len(buckets),
+        "max_batch": max_batch,
+        "max_delay_ms": max_delay_s * 1e3,
+        "warm_traces": warm_traces,
+        "warm_s": warm_s,
+        "serial_total_s": serial_total_s,
+        "coalesced_total_s": coalesced_total_s,
+        "speedup_coalesced_vs_serial": serial_total_s / coalesced_total_s,
+        "throughput_rps": sat_rps,
+        "steady_state_compiles": steady_compiles,
+        # check_bench floors are minimums; the zero-cold-trace ceiling is
+        # gated as a floor on the negated count (any compile -> negative)
+        "steady_state_compiles_negated": -steady_compiles,
+        "flushes": stats["flushes"],
+        "mean_flush_rows_saturated": (
+            sat_stats["flushed_rows"] / sat_stats["flushes"] if sat_stats["flushes"] else 0.0
+        ),
+        "mean_flush_rows": stats["mean_flush_rows"],
+        "paced": {
+            "arrival_rate_hz": rate_hz,
+            "total_s": paced_total_s,
+            "latency_p50_ms": float(np.percentile(lat_ms, 50)),
+            "latency_p99_ms": float(np.percentile(lat_ms, 99)),
+        },
+    }
+
+
+def run():
+    """Harness entry point (benchmarks.run): a short saturated stream."""
+    r = run_bench(N=120, max_batch=16, max_delay_s=0.002)
+    return [
+        (
+            f"serve_coalesced_N{r['requests']}",
+            r["coalesced_total_s"] / r["requests"] * 1e6,
+            f"speedup_vs_serial={r['speedup_coalesced_vs_serial']:.1f}x",
+        )
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small fast config for CI")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--N", type=int, default=None, help="requests in the stream")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    args = ap.parse_args()
+
+    N = args.N or (200 if args.smoke else 600)
+    result = run_bench(N=N, max_batch=args.max_batch, max_delay_s=args.max_delay_ms / 1e3)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -75,6 +75,7 @@ __all__ = [
     "bucket_shape",
     "default_engine",
     "make_sweep_mesh",
+    "request_bucket",
     "reset_default_engines",
     "solve_dp_batch_cached",
     "solve_schedule_batch_cached",
@@ -93,6 +94,30 @@ def bucket_shape(B: int, n: int, T: int, W: int):
     return (_next_pow2(B), _next_pow2(n), _next_pow2(T), _next_pow2(W))
 
 
+def _bucket_axes(b0: ProblemBatch):
+    """``(n, T, W)`` pow2 bucket axes of an already-0-lower-limit batch."""
+    _, nb, Tb, Wb = bucket_shape(1, b0.n, int(b0.T.max()), b0.W)
+    return nb, Tb, Wb
+
+
+def request_bucket(batch: ProblemBatch):
+    """The non-batch pow2 bucket axes ``(n, T, W)`` that the engine's DP
+    executable for ``batch`` compiles under (lower limits are shifted out
+    first, exactly as :meth:`SweepEngine.dispatch` does).
+
+    THE shared bucket math between the engine and the serve-layer coalescer
+    (``repro.serve.coalesce``): requests with equal axes can merge along
+    ``B`` into one dispatch without changing which executable runs — only
+    the pow2-``B`` ladder varies with flush size.
+
+    Computed in closed form — the shift preserves ``n`` and the table
+    width ``W`` and maps ``T -> T - sum(L)`` — so the serve layer's
+    per-request keying is O(B*n), not a full O(B*n*W) table shift.
+    """
+    Tp = int((batch.T - batch.lower.sum(axis=1)).max())
+    return _next_pow2(batch.n), _next_pow2(Tp), _next_pow2(batch.W)
+
+
 def make_sweep_mesh(axis: str = "sweep"):
     """1-D mesh over ALL visible devices, for sharding sweep batches.
 
@@ -107,12 +132,20 @@ def make_sweep_mesh(axis: str = "sweep"):
 class _DeviceSchedulePart:
     """Launch/materialize seam shared by the DP and selection-kernel
     handles: a padded ``(Bb, nb)`` schedule array still computing on the
-    device, plus the ORIGINAL (unpadded) batch to unpad against."""
+    device, plus the ORIGINAL (unpadded) batch to unpad against.
+
+    Materialization is lock-guarded: handles are handed across threads by
+    the serve layer (many requesters demux one flushed dispatch), and
+    without the lock two concurrent first calls to :meth:`result` would
+    race the transfer-and-cache sequence and could hand different array
+    objects to different callers.
+    """
 
     def __init__(self, raw, batch):
         self._raw = raw  # (Bb, nb) device array, still possibly computing
         self._batch = batch  # the ORIGINAL (unpadded) ProblemBatch
         self._out: Optional[np.ndarray] = None
+        self._mat_lock = threading.Lock()  # guards every host-side cache
 
     def done(self) -> bool:
         """True once the device computation has finished (best-effort: jax
@@ -124,11 +157,13 @@ class _DeviceSchedulePart:
         return bool(is_ready()) if callable(is_ready) else False
 
     def result(self) -> np.ndarray:
-        """The ``(B, n)`` int64 schedules — blocks until the solve lands."""
-        if self._out is None:
-            X0 = np.asarray(jax.device_get(self._raw))[: self._batch.B, : self._batch.n]
-            self._out = restore_lower_limits(self._batch, X0.astype(np.int64))
-        return self._out
+        """The ``(B, n)`` int64 schedules — blocks until the solve lands.
+        Thread-safe: concurrent callers all receive the SAME array."""
+        with self._mat_lock:
+            if self._out is None:
+                X0 = np.asarray(jax.device_get(self._raw))[: self._batch.B, : self._batch.n]
+                self._out = restore_lower_limits(self._batch, X0.astype(np.int64))
+            return self._out
 
 
 class SweepHandle(_DeviceSchedulePart):
@@ -155,10 +190,12 @@ class SweepHandle(_DeviceSchedulePart):
         ``k_last()[b, t]`` is the minimal cost of assigning exactly ``t``
         units in 0-lower-limit instance ``b`` (BIG where infeasible) — a
         free workload-Pareto curve per solve. The device transfer happens
-        once; repeated calls (and :meth:`objectives`) reuse it."""
-        if self._k_host is None:
-            self._k_host = np.asarray(jax.device_get(self._k_last))[: self._batch.B]
-        return self._k_host
+        once; repeated calls (and :meth:`objectives`) reuse it, from any
+        thread."""
+        with self._mat_lock:
+            if self._k_host is None:
+                self._k_host = np.asarray(jax.device_get(self._k_last))[: self._batch.B]
+            return self._k_host
 
     def objectives(self) -> np.ndarray:
         """Per-instance optimal objective ``K_last[b, t*_b]`` of the
@@ -178,9 +215,15 @@ class _SelectionPart(_DeviceSchedulePart):
     def __init__(self, raw_x, raw_obj, batch):
         super().__init__(raw_x, batch)
         self._raw_obj = raw_obj  # (Bb,) float32 0-lower-limit objectives
+        self._obj_host: Optional[np.ndarray] = None
 
     def objectives(self) -> np.ndarray:
-        return np.asarray(jax.device_get(self._raw_obj), np.float64)[: self._batch.B]
+        with self._mat_lock:
+            if self._obj_host is None:
+                self._obj_host = np.asarray(jax.device_get(self._raw_obj), np.float64)[
+                    : self._batch.B
+                ]
+            return self._obj_host
 
 
 class _HostPart:
@@ -217,17 +260,19 @@ class RegimeSplitHandle:
         self._B, self._n = B, n
         self._parts = parts  # list of (original-index list, part/handle)
         self._out: Optional[np.ndarray] = None
+        self._mat_lock = threading.Lock()
 
     def done(self) -> bool:
         return self._out is not None or all(p.done() for _, p in self._parts)
 
     def result(self) -> np.ndarray:
-        if self._out is None:
-            X = np.zeros((self._B, self._n), dtype=np.int64)
-            for idx, part in self._parts:
-                X[idx] = part.result()
-            self._out = X
-        return self._out
+        with self._mat_lock:
+            if self._out is None:
+                X = np.zeros((self._B, self._n), dtype=np.int64)
+                for idx, part in self._parts:
+                    X[idx] = part.result()
+                self._out = X
+            return self._out
 
     def objectives(self) -> np.ndarray:
         obj = np.zeros(self._B, dtype=np.float64)
@@ -276,16 +321,28 @@ class SweepEngine:
         self._ndev = int(mesh.shape[self.mesh_axis]) if mesh is not None else 1
         self._cache: OrderedDict = OrderedDict()
         self._hits = self._misses = self._compiles = self._evictions = 0
+        self._bucket_hits: dict = {}  # bucket key -> warm-hit count
         # Guards cache + counters: solves may come from a background planner
-        # thread (fl/pipeline.py) concurrently with main-thread callers.
+        # thread (fl/pipeline.py) or the serve-layer coalescer concurrently
+        # with main-thread callers.
         self._lock = threading.Lock()
 
     # ---- cache ---------------------------------------------------------
 
+    @staticmethod
+    def _bucket_label(key) -> str:
+        """JSON-friendly bucket name, e.g. ``"dp:B8:n16:T128:W64"``."""
+        kind, *dims = key
+        names = ("B", "n", "T", "W") if kind == "dp" else ("B", "n", "W")
+        return ":".join([kind] + [f"{a}{d}" for a, d in zip(names, dims)])
+
     def cache_stats(self) -> dict:
         """Counters since construction (or the last :meth:`clear`).
         ``compiles`` counts actual jit tracings — with a warm cache it stays
-        flat no matter how many solves run."""
+        flat no matter how many solves run. ``per_bucket_hits`` breaks the
+        warm hits down by bucket (keyed by :meth:`_bucket_label`; counts
+        survive eviction — they describe traffic, not cache residency), the
+        serve layer's per-shape traffic telemetry."""
         with self._lock:
             return {
                 "hits": self._hits,
@@ -294,6 +351,9 @@ class SweepEngine:
                 "evictions": self._evictions,
                 "entries": len(self._cache),
                 "max_entries": self.max_entries,
+                "per_bucket_hits": {
+                    self._bucket_label(k): v for k, v in self._bucket_hits.items()
+                },
             }
 
     def clear(self) -> None:
@@ -301,12 +361,14 @@ class SweepEngine:
         with self._lock:
             self._cache.clear()
             self._hits = self._misses = self._compiles = self._evictions = 0
+            self._bucket_hits = {}
 
     def _entry(self, key):
         with self._lock:
             fn = self._cache.get(key)
             if fn is not None:
                 self._hits += 1
+                self._bucket_hits[key] = self._bucket_hits.get(key, 0) + 1
                 self._cache.move_to_end(key)
                 return fn
             self._misses += 1
@@ -348,8 +410,8 @@ class SweepEngine:
 
     def _dispatch_dp(self, batch: ProblemBatch) -> SweepHandle:
         b0 = remove_lower_limits(batch)
-        Tmax = int(b0.T.max())
-        Bb, nb, Tb, Wb = bucket_shape(b0.B, b0.n, Tmax, b0.W)
+        nb, Tb, Wb = _bucket_axes(b0)  # same math the coalescer keys on
+        Bb = _next_pow2(b0.B)
         if Bb % self._ndev:
             Bb = ((Bb + self._ndev - 1) // self._ndev) * self._ndev
         padded = b0.pad_to(B=Bb, n=nb, W=Wb)

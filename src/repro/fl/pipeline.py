@@ -32,6 +32,16 @@ identical order — the executors differ only in wall-clock interleaving, and
 ``tests/test_fl_pipeline.py`` asserts schedules, losses, and energy match
 bit-for-bit.
 
+When the server is constructed with a
+:class:`~repro.serve.service.SchedulerService`, the planner thread's
+scenario solves route through the service's coalescer instead of hitting
+the engine directly (``FederatedServer.solve_scenarios`` submits the batch
+as one service request): campaign what-if planning and external served
+traffic then merge into shared flushes and warm ONE compile cache
+(DESIGN.md §14). Bit-identity is preserved — the service pads requests
+inertly, exactly like the engine's own bucketing — so the executors'
+determinism contract above is unchanged.
+
 Overlap accounting: each PlanFuture records the planner time it consumed
 (``busy_s``) and the main-thread time spent blocked in ``result()``
 (``blocked_s``). The campaign's ``overlap_fraction`` is the share of

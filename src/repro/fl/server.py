@@ -117,6 +117,7 @@ class FederatedServer:
         scenario_T_candidates: Optional[Sequence[int]] = None,
         scenario_dropouts: Optional[Sequence[Sequence[int]]] = None,
         engine: Optional[SweepEngine] = None,
+        service=None,
     ):
         """``round_T``: total mini-batches scheduled per round; ``None``
         defaults to half the round tensor's capacity (and can still be set
@@ -136,11 +137,23 @@ class FederatedServer:
         shapes repeat while only the cost *values* drift, so round 1
         compiles the DP and every later round reuses the warm executable
         (inspect via ``server.engine.cache_stats()``).
+
+        ``service``: an optional
+        :class:`~repro.serve.service.SchedulerService`. When set, scenario
+        batches are SUBMITTED to the service instead of dispatched directly
+        — campaign what-if planning coalesces with whatever other traffic
+        the service carries and shares its warm compile cache (DESIGN.md
+        §14). ``engine=None`` then defaults to the service's engine so
+        campaign cache accounting (``CampaignHistory.dp_cache_stats``)
+        observes the shared cache.
         """
         self.params = init_params
         self.estimator = estimator
         self.algorithm = algorithm
         self.round_T = round_T
+        self.service = service
+        if engine is None and service is not None:
+            engine = service.engine
         self.engine = engine if engine is not None else default_engine()
         self.scenario_T_candidates = list(scenario_T_candidates or ())
         self.scenario_dropouts = [tuple(s) for s in (scenario_dropouts or ())]
@@ -253,10 +266,20 @@ class FederatedServer:
         e.g. dropout/deadline what-ifs over a linear or DVFS-superlinear
         energy fleet — ride the marginal fast path (DESIGN.md §13) instead
         of paying the pseudo-polynomial DP; arbitrary-regime scenarios
-        still batch into the fused DP."""
+        still batch into the fused DP.
+
+        With a :class:`~repro.serve.service.SchedulerService` configured,
+        the whole scenario batch goes through the service as ONE request —
+        the coalescer may merge it with same-bucket external traffic into a
+        single dispatch, and results stay bit-identical to the direct
+        engine path (inert padding)."""
         if not problems:
             return None
-        X = self.engine.solve(problems, split_regimes=True)[:, : self.n_clients]
+        if self.service is not None:
+            X = self.service.submit(problems, split_regimes=True).result()
+            X = X[:, : self.n_clients]
+        else:
+            X = self.engine.solve(problems, split_regimes=True)[:, : self.n_clients]
         energies = np.array(
             [total_cost(p, X[b]) for b, p in enumerate(problems)], dtype=np.float64
         )

@@ -109,6 +109,7 @@ def test_cached_solve_bit_identical_to_uncached(seed):
     X2 = eng.solve(probs2)
     np.testing.assert_array_equal(X2, solve_schedule_dp_batch(probs2))
     s = eng.cache_stats()
+    per_bucket = s.pop("per_bucket_hits")
     assert s == {
         "hits": 1,
         "misses": 1,
@@ -117,6 +118,10 @@ def test_cached_solve_bit_identical_to_uncached(seed):
         "entries": 1,
         "max_entries": eng.max_entries,
     }
+    # the one hit is attributed to the one (dp) bucket, by label
+    assert list(per_bucket.values()) == [1]
+    (label,) = per_bucket
+    assert label.startswith("dp:B") and all(ax in label for ax in (":n", ":T", ":W"))
     for p, x in zip(probs2, X2):
         validate_schedule(p, x[: p.n])
         assert total_cost(p, x[: p.n]) == pytest.approx(
@@ -157,6 +162,91 @@ def test_lru_eviction_and_recompile():
     np.testing.assert_array_equal(X, solve_schedule_dp_batch(small))
     eng.clear()
     assert eng.cache_stats()["compiles"] == 0 and eng.cache_stats()["entries"] == 0
+
+
+def test_lru_evicts_oldest_of_many_buckets():
+    """More buckets than cache slots: the LEAST-recently-used executable is
+    the one evicted (a hit refreshes recency), re-entering an evicted bucket
+    recompiles to bit-identical results, and the counters say so."""
+    rng = np.random.default_rng(6)
+    bucket_a = [random_problem(rng, n=2, T=4, regime="linear") for _ in range(2)]
+    bucket_b = [random_problem(rng, n=6, T=20, regime="arbitrary") for _ in range(2)]
+    bucket_c = [random_problem(rng, n=3, T=40, regime="increasing") for _ in range(2)]
+
+    eng = SweepEngine(max_entries=2)
+    Xa = eng.solve(bucket_a)
+    eng.solve(bucket_b)  # cache (LRU -> MRU): [a, b]
+    eng.solve(bucket_a)  # hit refreshes a: [b, a]
+    assert eng.cache_stats()["hits"] == 1
+    eng.solve(bucket_c)  # 3rd bucket: evicts b (oldest), NOT the refreshed a
+    s = eng.cache_stats()
+    assert s["evictions"] == 1 and s["entries"] == 2 and s["compiles"] == 3
+
+    X = eng.solve(bucket_a)  # a survived: still warm
+    s = eng.cache_stats()
+    assert s["compiles"] == 3 and s["hits"] == 2
+    np.testing.assert_array_equal(X, Xa)
+    np.testing.assert_array_equal(X, solve_schedule_dp_batch(bucket_a))
+
+    eng.solve(bucket_b)  # b was evicted: honest recompile, exact again
+    s = eng.cache_stats()
+    assert s["compiles"] == 4 and s["evictions"] == 2, s
+    np.testing.assert_array_equal(eng.solve(bucket_b), solve_schedule_dp_batch(bucket_b))
+    # per-bucket hit attribution saw every warm re-solve
+    assert sum(s["per_bucket_hits"].values()) == s["hits"]
+
+
+def test_dispatch_thread_safe_under_concurrent_producers():
+    """Many threads dispatch()ing and materializing against ONE engine —
+    including several threads racing .result()/.k_last() on a SHARED handle
+    — must neither crash nor corrupt results (DESIGN.md §14: the serve
+    layer's completer + requesters all drain one engine)."""
+    import threading
+
+    rng = np.random.default_rng(7)
+    batches = []
+    for i in range(8):
+        probs = random_mixed_problems(rng, int(rng.integers(1, 5)))
+        batches.append((ProblemBatch.from_problems(probs), solve_schedule_dp_batch(probs)))
+
+    eng = SweepEngine()
+    eng.solve(batches[0][0])  # warm one bucket; others trace under contention
+    errors = []
+    barrier = threading.Barrier(6)
+
+    def producer(tid):
+        try:
+            barrier.wait(timeout=60)
+            for r in range(6):
+                batch, X_ref = batches[(tid + r) % len(batches)]
+                h = eng.dispatch(batch, split_regimes=bool((tid + r) % 2))
+                X = h.result()
+                assert np.array_equal(X[: batch.B, : batch.n], X_ref), (tid, r)
+        except BaseException as e:  # surface into the main thread
+            errors.append(e)
+
+    shared_batch, shared_ref = batches[1]
+    shared_handle = eng.dispatch(shared_batch)
+
+    def drainer():
+        try:
+            barrier.wait(timeout=60)
+            for _ in range(4):
+                assert np.array_equal(
+                    shared_handle.result()[: shared_batch.B, : shared_batch.n], shared_ref
+                )
+                assert shared_handle.k_last().shape[0] == shared_handle.result().shape[0]
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=producer, args=(t,)) for t in range(4)]
+    threads += [threading.Thread(target=drainer) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), "deadlocked thread"
+    assert not errors, errors
 
 
 def test_schedule_batch_and_deadline_sweep_share_an_engine():

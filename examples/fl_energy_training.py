@@ -10,6 +10,12 @@ rounds are CLI-scalable; defaults run on a laptop CPU in a few minutes.
 
 Scaling up (e.g. --layers 8 --d-model 320 --vocab 8192 ~ 10M params,
 --rounds 300) reproduces the same curves at larger scale.
+
+``--frontier-mode knee`` (or ``min_energy`` / ``min_time`` / a seconds
+budget) plans every round from the live (energy, completion-time) Pareto
+frontier instead of the plain min-energy solve (DESIGN.md §15): the server
+sweeps a deadline grid in one batched dispatch per round and picks the
+configured operating point.
 """
 
 import argparse
@@ -20,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data import client_corpora, make_lm_examples
+from repro.core import Solver
 from repro.fl import EnergyEstimator, FederatedServer, make_fleet, run_campaign
 from repro.models import init_params, loss_fn, param_count
 from repro.optim import sgd
@@ -38,7 +45,18 @@ def main():
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--algorithm", default="auto", help="auto|dp|marin|olar|uniform|proportional")
     ap.add_argument("--compare", action="store_true", help="also run the uniform baseline")
+    ap.add_argument(
+        "--frontier-mode", default=None,
+        help="knee|min_energy|min_time|<seconds> — pick each round's "
+        "operating point from the live energy x time Pareto frontier",
+    )
     args = ap.parse_args()
+    frontier_mode = args.frontier_mode
+    if frontier_mode is not None:
+        try:
+            frontier_mode = float(frontier_mode)  # a round-time budget
+        except ValueError:
+            pass
 
     cfg = ModelConfig(
         arch="fl-lm", family="dense",
@@ -60,21 +78,44 @@ def main():
         est.calibrate(rng)
         corpora = client_corpora(rng, args.clients, args.seq * 200, args.vocab)
         examples = [make_lm_examples(c, args.seq) for c in corpora]
+        # per-client time tables (seconds for j batches), for frontier mode:
+        # seconds-per-batch drawn once per fleet, deterministic in the seed
+        seconds_per_batch = np.random.default_rng(seed + 1).uniform(
+            0.5, 2.5, size=args.clients
+        )
+        time_tables = [
+            np.arange(d.max_batches + 1, dtype=np.float64) * spb
+            for d, spb in zip(fleet, seconds_per_batch)
+        ]
         server = FederatedServer(
             loss_fn=lm_loss,
             init_params=init_params(cfg, jax.random.PRNGKey(seed)),
             client_optimizer=sgd(args.lr),
             estimator=est,
             algorithm=algorithm,
+            frontier_mode=frontier_mode if algorithm != "uniform" else None,
+            time_tables=time_tables,
         )
         T = sum(d.max_batches for d in fleet) // 2
+
+        if frontier_mode is not None and algorithm != "uniform":
+            # one facade call shows the trade-off space the planner works in
+            front = Solver(engine=server.engine).frontier(
+                est.problem(T), time_tables
+            )
+            lo, hi = front.min_time(), front.min_energy()
+            print(
+                f"  round-0 frontier: {len(front)} points, "
+                f"{lo.time:.1f}s/{lo.energy:.0f}J (fastest) .. "
+                f"{hi.time:.1f}s/{hi.energy:.0f}J (cheapest); mode={frontier_mode!r}"
+            )
         t0 = time.time()
 
         def on_round(r):
             if r.round_index % max(args.rounds // 10, 1) == 0:
                 print(
                     f"  [{algorithm}] round {r.round_index:3d} loss {r.mean_loss:.4f} "
-                    f"energy {r.energy_joules:8.1f} J  x={list(r.assignments)}"
+                    f"energy {r.energy_joules:8.1f} J  x={[int(v) for v in r.assignments]}"
                 )
 
         hist = run_campaign(

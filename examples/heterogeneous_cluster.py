@@ -11,7 +11,7 @@ per-pod memory caps (upper limits) and keep-warm floors (lower limits).
 
 import numpy as np
 
-from repro.core import Problem, schedule, total_cost
+from repro.core import Problem, Solver
 from repro.core.costs import linear_cost, superlinear_cost
 
 
@@ -42,14 +42,15 @@ def main():
     print(f"global batch: {T} microbatches over {pods}")
     print(f"cost regime: {problem.regime()}\n")
 
+    solver = Solver()  # the facade (DESIGN.md §15)
     for alg in ("auto", "uniform", "proportional", "olar"):
-        x = schedule(problem, alg)
-        per_pod = ", ".join(f"{p}={int(v)}" for p, v in zip(pods, x))
-        print(f"{alg:>14}: {per_pod}  ->  {total_cost(problem, x):8.1f} J/step")
+        sol = solver.solve(problem, algorithm=alg)
+        per_pod = ", ".join(f"{p}={int(v)}" for p, v in zip(pods, sol.schedule))
+        print(f"{alg:>14}: {per_pod}  ->  {sol.objective:8.1f} J/step")
 
-    x_opt = schedule(problem, "auto")
-    x_uni = schedule(problem, "uniform")
-    save = 100 * (1 - total_cost(problem, x_opt) / total_cost(problem, x_uni))
+    x_opt = solver.solve(problem)
+    x_uni = solver.solve(problem, algorithm="uniform")
+    save = 100 * (1 - x_opt.objective / x_uni.objective)
     print(f"\nper-step energy saved vs uniform: {save:.1f}% "
           f"(~{save:.1f}% of the training-campaign compute bill)")
 

@@ -5,13 +5,7 @@
 
 import numpy as np
 
-from repro.core import (
-    DEVICE_CLASSES,
-    device_fleet_problem,
-    schedule,
-    select_algorithm,
-    total_cost,
-)
+from repro.core import Solver, device_fleet_problem
 
 
 def main():
@@ -29,23 +23,25 @@ def main():
     )
     problem.validate()
 
+    # the Solver facade (DESIGN.md §15): one front door for every solve
+    solver = Solver()
+    opt = solver.solve(problem)
     print(f"fleet: {classes}")
-    print(f"round workload T={T}, regime detected: {problem.regime()!r}")
-    print(f"auto-selected algorithm: {select_algorithm(problem)}\n")
+    print(f"round workload T={T}, regime detected: {opt.regime!r}")
+    print(f"auto-selected algorithm: {opt.algorithm}\n")
 
     print(f"{'algorithm':>16} | {'schedule x_i':>28} | energy (J)")
     print("-" * 72)
     for alg in ("auto", "dp", "marin", "olar", "uniform", "proportional"):
         try:
-            x = schedule(problem, alg)
+            sol = solver.solve(problem, algorithm=alg)
         except Exception as e:
             print(f"{alg:>16} | inapplicable: {e}")
             continue
-        print(f"{alg:>16} | {str(list(x)):>28} | {total_cost(problem, x):8.1f}")
+        print(f"{alg:>16} | {str([int(v) for v in sol.schedule]):>28} | {sol.objective:8.1f}")
 
-    x_opt = schedule(problem, "auto")
-    x_uni = schedule(problem, "uniform")
-    save = 100 * (1 - total_cost(problem, x_opt) / total_cost(problem, x_uni))
+    x_uni = solver.solve(problem, algorithm="uniform")
+    save = 100 * (1 - opt.objective / x_uni.objective)
     print(f"\nenergy saved vs uniform split: {save:.1f}%")
 
 

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # CI entry point: dev deps (best-effort — tier-1 runs without network thanks
 # to tests/_hypothesis_fallback.py), lint, tier-1 tests, the perf smokes
-# (BENCH_batch/sweep/async/kernels/marginal/serve.json), and the regression
-# gate (scripts/check_bench.py) against the committed baselines.
+# (BENCH_batch/sweep/async/kernels/marginal/serve/pareto.json), and the
+# regression gate (scripts/check_bench.py) against the committed baselines.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -65,6 +65,10 @@ if ! python benchmarks/bench_marginal.py --smoke --out BENCH_marginal.json; then
 fi
 if ! python benchmarks/bench_serve.py --smoke --out BENCH_serve.json; then
   echo "ci.sh: FAIL — bench_serve.py perf smoke crashed" >&2
+  exit 1
+fi
+if ! python benchmarks/bench_pareto.py --smoke --out BENCH_pareto.json; then
+  echo "ci.sh: FAIL — bench_pareto.py perf smoke crashed" >&2
   exit 1
 fi
 

@@ -3,11 +3,20 @@
 Minimal Cost FL Schedule problem (Def. 1), the (MC)^2MKP knapsack problem and
 its DP solution (Alg. 1), the monotone-regime algorithms MarIn/MarCo/
 MarDecUn/MarDec (Algs. 2-7), cost-function families, and baselines.
+
+The supported solve entrypoint is the :class:`Solver` facade (DESIGN.md §15):
+``Solver().solve(...)`` / ``.sweep(...)`` / ``.frontier(...)``. The legacy
+module-level entrypoints (``schedule``, ``schedule_batch``,
+``schedule_with_deadline``, ``deadline_sweep``, ``solve_dp_batch_cached``,
+``solve_schedule_batch_cached``) remain as bit-identical deprecated shims.
 """
 
 from .baselines import greedy_marginal, olar, proportional, random_schedule, uniform
 from .costs import (
     DEVICE_CLASSES,
+    JOULES_PER_KWH,
+    CostWindows,
+    carbon_cost_table,
     device_fleet_problem,
     linear_cost,
     measured_cost,
@@ -43,13 +52,25 @@ from .problem import (
     validate_schedule,
     validate_schedule_batch,
 )
+from .pareto import (
+    ParetoFrontier,
+    ParetoPoint,
+    candidate_deadlines,
+    deadline_grid,
+    feasible_deadline_range,
+    frontier_by_window,
+    pareto_frontier,
+)
 from .scheduler import (
     ALGORITHMS,
     deadline_sweep,
     schedule,
     schedule_batch,
+    schedule_with_deadline,
     select_algorithm,
+    tighten_for_deadline,
 )
+from .solver import Solution, SolutionBatch, Solver
 from .sweep import (
     SweepEngine,
     bucket_shape,
@@ -95,9 +116,24 @@ __all__ = [
     "greedy_marginal",
     "schedule",
     "schedule_batch",
+    "schedule_with_deadline",
     "deadline_sweep",
+    "tighten_for_deadline",
     "select_algorithm",
     "ALGORITHMS",
+    "Solver",
+    "Solution",
+    "SolutionBatch",
+    "ParetoFrontier",
+    "ParetoPoint",
+    "pareto_frontier",
+    "frontier_by_window",
+    "candidate_deadlines",
+    "deadline_grid",
+    "feasible_deadline_range",
+    "CostWindows",
+    "carbon_cost_table",
+    "JOULES_PER_KWH",
     "SweepEngine",
     "bucket_shape",
     "default_engine",

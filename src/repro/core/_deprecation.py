@@ -1,0 +1,46 @@
+"""Warn-once deprecation plumbing for the legacy solver entrypoints.
+
+PR 7 (DESIGN.md §15) folded the six ad-hoc solve entrypoints that five PRs
+of growth accumulated — ``schedule`` / ``schedule_batch`` /
+``schedule_with_deadline`` / ``deadline_sweep`` / ``solve_dp_batch_cached``
+/ ``solve_schedule_batch_cached`` — behind one facade,
+:class:`repro.core.solver.Solver`. The old names keep working bit-identically
+(they are thin shims over the same private implementations the facade
+calls), but each fires ONE :class:`DeprecationWarning` per process so
+migrations are visible without drowning sweep loops in warning spam.
+
+Kept in its own leaf module because both ``core/scheduler.py`` and
+``core/sweep.py`` need it and ``core/solver.py`` imports both.
+"""
+
+from __future__ import annotations
+
+import threading
+import warnings
+
+__all__ = ["reset_deprecation_warnings", "warn_deprecated"]
+
+_WARNED: set = set()
+_LOCK = threading.Lock()
+
+
+def warn_deprecated(name: str, replacement: str) -> None:
+    """Fires ``DeprecationWarning`` for entrypoint ``name`` exactly once per
+    process (repeat calls are silent — deterministic, unlike the interpreter's
+    per-call-site ``__warningregistry__`` dedup)."""
+    with _LOCK:
+        if name in _WARNED:
+            return
+        _WARNED.add(name)
+    warnings.warn(
+        f"repro.core.{name} is deprecated; use {replacement} "
+        f"(the Solver facade, DESIGN.md §15) — behavior is bit-identical",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset_deprecation_warnings() -> None:
+    """Forgets which entrypoints already warned (test isolation)."""
+    with _LOCK:
+        _WARNED.clear()

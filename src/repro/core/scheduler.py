@@ -1,7 +1,7 @@
-"""Unified scheduling API: regime detection + algorithm dispatch.
+"""Regime detection + algorithm dispatch (the facade's solve internals).
 
-``schedule(problem, algorithm="auto")`` picks the lowest-complexity optimal
-algorithm for the detected marginal-cost regime (paper Table 2):
+Table 2 of the paper maps each marginal-cost regime to its lowest-complexity
+optimal algorithm:
 
   regime      | no binding upper limits | with upper limits
   ------------|-------------------------|-------------------
@@ -12,6 +12,17 @@ algorithm for the detected marginal-cost regime (paper Table 2):
 
 (*constant marginals without upper limits: MarDecUn's Θ(n) single-resource
 assignment is optimal there too, per Table 2.)
+
+Since PR 7 (DESIGN.md §15) the supported entrypoint is the
+:class:`repro.core.solver.Solver` facade — ``solve`` / ``sweep`` /
+``frontier`` — which calls the private ``_schedule`` / ``_schedule_batch`` /
+``_deadline_sweep`` implementations here. The old module-level names
+(``schedule``, ``schedule_batch``, ``schedule_with_deadline``,
+``deadline_sweep``) remain as bit-identical deprecated shims. Nothing here
+solves "directly" anymore in the batched paths: every batch solve routes
+through the :class:`~repro.core.sweep.SweepEngine` compile cache, and the
+single-instance path delegates to the per-algorithm callables in
+``ALGORITHMS``.
 """
 
 from __future__ import annotations
@@ -21,12 +32,13 @@ from typing import Callable, Dict
 import numpy as np
 
 from . import baselines
+from ._deprecation import warn_deprecated
 from .jax_dp import solve_schedule_dp_jax
 from .marginal import marco, mardec, mardecun, marin
 from .marginal_jax import select_algorithm_batch
 from .mc2mkp import solve_schedule_dp
 from .problem import Problem, total_cost, validate_schedule
-from .sweep import solve_dp_batch_cached, solve_schedule_batch_cached
+from .sweep import _solve_cached
 
 __all__ = [
     "schedule",
@@ -66,7 +78,16 @@ def select_algorithm(problem: Problem) -> str:
     return select_algorithm_batch([problem])[0]
 
 
-def schedule(problem: Problem, algorithm: str = "auto", check: bool = True) -> np.ndarray:
+# ---------------------------------------------------------------------------
+# private implementations — the Solver facade's solve internals. The public
+# module-level names below are deprecated warn-once shims over these; keeping
+# one body per behavior is what makes the shims bit-identical by construction.
+# ---------------------------------------------------------------------------
+
+
+def _schedule(problem: Problem, algorithm: str = "auto", check: bool = True):
+    """Single-instance solve; returns ``(x, resolved_algorithm)`` so the
+    facade can report which Table-2 algorithm "auto" picked."""
     if algorithm == "auto":
         algorithm = select_algorithm(problem)
     try:
@@ -76,7 +97,93 @@ def schedule(problem: Problem, algorithm: str = "auto", check: bool = True) -> n
     x = fn(problem)
     if check:
         validate_schedule(problem, x)
-    return x
+    return x, algorithm
+
+
+def _schedule_batch(
+    problems,
+    algorithm: str = "auto",
+    check: bool = True,
+    backend=None,
+    engine=None,
+):
+    """Batched solve: every DP-shaped solve goes through the sweep engine's
+    shape-bucketed compile cache (DESIGN.md §10); "auto" takes the
+    regime-split path (§13). Returns a list of ``(n_b,)`` int64 schedules."""
+    problems = list(problems)
+    if not problems:
+        return []
+    out = [None] * len(problems)
+    dp_idx = []
+    if algorithm == "auto":
+        X = _solve_cached(problems, backend, engine, split_regimes=True)
+        for b, p in enumerate(problems):
+            out[b] = np.asarray(X[b, : p.n], dtype=np.int64)
+    elif algorithm in _DP_ALGORITHMS:
+        dp_idx = list(range(len(problems)))
+        if algorithm == "dp_jax_pallas":
+            backend = "pallas"
+    else:
+        for b, p in enumerate(problems):
+            out[b] = _schedule(p, algorithm, check=False)[0]
+    if dp_idx:
+        X = _solve_cached(
+            [problems[b] for b in dp_idx], backend, engine, split_regimes=False
+        )
+        for row, b in zip(X, dp_idx):
+            out[b] = np.asarray(row[: problems[b].n], dtype=np.int64)
+    if check:
+        for p, x in zip(problems, out):
+            validate_schedule(p, x)
+    return out
+
+
+def _schedule_with_deadline(
+    problem: Problem,
+    time_tables,
+    deadline: float,
+    algorithm: str = "auto",
+) -> np.ndarray:
+    """ε-constraint single solve: tighten, then :func:`_schedule`."""
+    return _schedule(tighten_for_deadline(problem, time_tables, deadline), algorithm)[0]
+
+
+def _deadline_sweep(
+    problem: Problem,
+    time_tables,
+    deadlines,
+    check: bool = True,
+    backend=None,
+    engine=None,
+) -> np.ndarray:
+    """Whole deadline grid in ONE batched DP solve; ``(B, n)`` int64, row
+    ``b`` optimal for ``deadlines[b]``. Infeasible points raise ValueError
+    naming the offending deadline."""
+    deadlines = list(deadlines)
+    tight = []
+    for d in deadlines:
+        try:
+            tight.append(tighten_for_deadline(problem, time_tables, float(d)))
+        except ValueError as e:
+            raise ValueError(f"deadline_sweep point {d}: {e}") from e
+    X = _solve_cached(tight, backend, engine, split_regimes=False)[:, : problem.n]
+    if check:
+        for p, x in zip(tight, X):
+            validate_schedule(p, x)
+    return X.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims (PR 7, DESIGN.md §15) — use repro.core.solver.Solver
+# ---------------------------------------------------------------------------
+
+
+def schedule(problem: Problem, algorithm: str = "auto", check: bool = True) -> np.ndarray:
+    """Deprecated shim: use ``Solver().solve(problem)`` (`.schedule` on the
+    returned :class:`~repro.core.solver.Solution`). Bit-identical — same
+    regime dispatch, same per-algorithm callables."""
+    warn_deprecated("schedule", "Solver().solve(problem).schedule")
+    return _schedule(problem, algorithm, check)[0]
 
 
 def schedule_batch(
@@ -86,11 +193,10 @@ def schedule_batch(
     backend=None,
     engine=None,
 ):
-    """Solves ``B`` instances, batching every solve into regime-wide jitted
-    programs (DESIGN.md §9/§13) routed through the sweep engine's
-    shape-bucketed compile cache (§10).
+    """Deprecated shim: use ``Solver(engine=...).solve(problems)``
+    (`.schedules` on the returned :class:`~repro.core.solver.SolutionBatch`).
 
-    Dispatch mirrors :func:`schedule`:
+    Dispatch (unchanged, now documented on the facade):
       * ``algorithm="auto"``: the engine's regime-split path — each
         instance's regime picks its algorithm (one shared rule with the
         serial dispatch), MarIn/MarCo instances ride the batched marginal
@@ -103,45 +209,16 @@ def schedule_batch(
       * any other named algorithm: a plain per-instance loop.
 
     ``engine``: an explicit :class:`~repro.core.sweep.SweepEngine` (e.g. a
-    sharded one); ``None`` uses the process-wide default for ``backend``
-    (``backend=None`` -> "auto": the per-hardware dispatch table — blocked
-    jnp on CPU, tuned Pallas on TPU/GPU), so repeated shapes anywhere in
-    the process skip compilation. Requesting a backend that contradicts the
-    given engine's (e.g. ``dp_jax_pallas`` with a "blocked" engine) raises
-    ValueError instead of silently running the engine's kernel.
-
-    Returns a list of ``(n_b,)`` int64 schedules, one per input instance.
+    sharded one); ``None`` uses the process-wide default for ``backend``.
+    Requesting a backend that contradicts the given engine's raises
+    ValueError. Returns a list of ``(n_b,)`` int64 schedules.
     """
-    problems = list(problems)
-    if not problems:
-        return []
-    out = [None] * len(problems)
-    dp_idx = []
-    if algorithm == "auto":
-        X = solve_schedule_batch_cached(problems, backend=backend, engine=engine)
-        for b, p in enumerate(problems):
-            out[b] = np.asarray(X[b, : p.n], dtype=np.int64)
-    elif algorithm in _DP_ALGORITHMS:
-        dp_idx = list(range(len(problems)))
-        if algorithm == "dp_jax_pallas":
-            backend = "pallas"
-    else:
-        for b, p in enumerate(problems):
-            out[b] = schedule(p, algorithm, check=False)
-    if dp_idx:
-        X = solve_dp_batch_cached(
-            [problems[b] for b in dp_idx], backend=backend, engine=engine
-        )
-        for row, b in zip(X, dp_idx):
-            out[b] = np.asarray(row[: problems[b].n], dtype=np.int64)
-    if check:
-        for p, x in zip(problems, out):
-            validate_schedule(p, x)
-    return out
+    warn_deprecated("schedule_batch", "Solver(engine=...).solve(problems).schedules")
+    return _schedule_batch(problems, algorithm, check, backend, engine)
 
 
 def schedule_cost(problem: Problem, algorithm: str = "auto") -> float:
-    return total_cost(problem, schedule(problem, algorithm))
+    return total_cost(problem, _schedule(problem, algorithm)[0])
 
 
 def schedule_with_deadline(
@@ -150,29 +227,35 @@ def schedule_with_deadline(
     deadline: float,
     algorithm: str = "auto",
 ) -> np.ndarray:
-    """Energy-minimal schedule subject to a round deadline (beyond-paper).
+    """Deprecated shim: use ``Solver().solve(problem, deadline=D,
+    time_tables=tt)``.
 
-    The paper optimizes energy alone and cites time/energy bi-objective work
-    ([28]) as related; the epsilon-constraint version reduces cleanly to the
-    SAME problem: a deadline on each device's computation time is just a
-    tighter upper limit ``U_i' = max{j : time_i(j) <= deadline}`` — the
-    feasible sets stay intervals, so every optimal algorithm applies
-    unchanged.
+    Energy-minimal schedule subject to a round deadline (beyond-paper). The
+    ε-constraint reduces cleanly to the SAME problem: a deadline on each
+    device's computation time is just a tighter upper limit
+    ``U_i' = max{j : time_i(j) <= deadline}`` — feasible sets stay
+    intervals, so every optimal algorithm applies unchanged
+    (:func:`tighten_for_deadline`). Raises ValueError if the deadline makes
+    the instance infeasible.
 
     Args:
       time_tables: list of (U_i+1,) arrays; time_tables[i][j] = seconds for
         device i to train j batches (monotone non-decreasing).
       deadline: maximum allowed per-device time (the target round duration).
-
-    Raises ValueError if the deadline makes the instance infeasible.
     """
-    return schedule(tighten_for_deadline(problem, time_tables, deadline), algorithm)
+    warn_deprecated(
+        "schedule_with_deadline", "Solver().solve(problem, deadline=D, time_tables=tt)"
+    )
+    return _schedule_with_deadline(problem, time_tables, deadline, algorithm)
 
 
 def tighten_for_deadline(problem: Problem, time_tables, deadline: float) -> Problem:
     """The deadline-tightened instance: ``U_i' = max{j : time_i(j) <= D}``
     (clipped to ``U_i``). Raises ValueError if infeasible — a device cannot
-    meet its lower limit, or fleet capacity drops below ``T``."""
+    meet its lower limit, or fleet capacity drops below ``T``.
+
+    NOT deprecated: this is the ε-constraint reduction itself, shared by the
+    facade's ``sweep``/``frontier`` paths and ``repro.core.pareto``."""
     new_upper = []
     for i in range(problem.n):
         t = np.asarray(time_tables[i], dtype=np.float64)
@@ -207,29 +290,17 @@ def deadline_sweep(
     backend=None,
     engine=None,
 ) -> np.ndarray:
-    """Pareto-front builder: energy-minimal schedules for a whole grid of
-    deadlines in ONE batched DP solve.
+    """Deprecated shim: use ``Solver(engine=...).sweep(problem, tt,
+    deadlines)`` — or :meth:`~repro.core.solver.Solver.frontier` for the
+    pruned Pareto set.
 
-    Constructs the ``B`` deadline-tightened instances (same ``n`` and ``T``,
-    progressively looser ``U_i``) and stacks them through the sweep engine
-    (``engine``, or the shared default for ``backend``), so the entire
-    epsilon-constraint sweep costs one kernel launch — and, once its shape
-    bucket is warm, zero compilations.
-
-    Returns a ``(B, n)`` int64 array, row ``b`` optimal for ``deadlines[b]``.
-    Raises ValueError (naming the offending deadline) if any point is
-    infeasible — probe feasibility first if sweeping below the makespan
-    floor.
+    Energy-minimal schedules for a whole grid of deadlines in ONE batched DP
+    solve: the ``B`` deadline-tightened instances (same ``n`` and ``T``,
+    progressively looser ``U_i``) stack through the sweep engine, so the
+    entire ε-constraint sweep costs one kernel launch — and, once its shape
+    bucket is warm, zero compilations. Returns a ``(B, n)`` int64 array, row
+    ``b`` optimal for ``deadlines[b]``; raises ValueError (naming the
+    offending deadline) if any point is infeasible.
     """
-    deadlines = list(deadlines)
-    tight = []
-    for d in deadlines:
-        try:
-            tight.append(tighten_for_deadline(problem, time_tables, float(d)))
-        except ValueError as e:
-            raise ValueError(f"deadline_sweep point {d}: {e}") from e
-    X = solve_dp_batch_cached(tight, backend=backend, engine=engine)[:, : problem.n]
-    if check:
-        for p, x in zip(tight, X):
-            validate_schedule(p, x)
-    return X.astype(np.int64)
+    warn_deprecated("deadline_sweep", "Solver(engine=...).sweep(problem, tt, deadlines)")
+    return _deadline_sweep(problem, time_tables, deadlines, check, backend, engine)

@@ -55,6 +55,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from ..kernels.ops import resolve_backend
+from ._deprecation import warn_deprecated
 from .jax_dp import _solve_fused_batch, pack_problem
 from .marginal_jax import (
     MARGINAL_BATCH_ALGORITHMS,
@@ -204,6 +205,18 @@ class SweepHandle(_DeviceSchedulePart):
         k = self.k_last()
         t = np.asarray(self._t_star)
         return k[np.arange(self._batch.B), t[: self._batch.B]]
+
+    def frontier(self, b: int = 0):
+        """The pruned (workload, energy) Pareto set of instance ``b``,
+        extracted from the final DP row with no extra dispatch: ``(t, e)``
+        arrays, workload ascending / energy strictly increasing, in
+        0-lower-limit terms (add ``t += sum(L_b)`` and the fixed cost
+        ``sum_i C_i(L_i)`` to recover original-instance points). The
+        workload-axis sibling of the deadline-axis frontier built by
+        :func:`repro.core.pareto.pareto_frontier`."""
+        from .pareto import workload_frontier  # leaf-ward: pareto imports sweep
+
+        return workload_frontier(self.k_last()[int(b)])
 
 
 class _SelectionPart(_DeviceSchedulePart):
@@ -560,42 +573,60 @@ def reset_default_engines() -> None:
     _DEFAULT_ENGINES.clear()
 
 
-def solve_dp_batch_cached(
-    problems, backend: Optional[str] = None, engine=None
-) -> np.ndarray:
-    """Batched DP solve through a sweep engine (the given one, else the
-    shared default for ``backend``).
-
-    ``backend=None`` means "whatever the engine runs" (default engines:
-    "auto", resolved per hardware). Naming BOTH an engine and a different
-    backend is a contradiction — the engine's executables are compiled for
-    ITS backend — and raises rather than silently running the wrong kernel
-    (backends are compared after "auto" resolution, so requesting "auto" on
-    the default CPU engine is not a conflict).
-    """
+def _resolve_engine(backend: Optional[str], engine):
+    """The engine a cached solve runs on: the given one (after checking it
+    does not contradict an explicitly named backend — its executables are
+    compiled for ITS backend, so we raise rather than silently running the
+    wrong kernel; backends compare after "auto" resolution), else the shared
+    default for ``backend`` (``None`` -> "auto": per-hardware dispatch)."""
     if engine is not None:
         if backend is not None and resolve_backend(backend) != engine.backend:
             raise ValueError(
                 f"backend {backend!r} conflicts with engine.backend "
                 f"{engine.backend!r}; pass an engine built for that backend"
             )
-        return engine.solve(problems)
-    return default_engine(backend or "auto").solve(problems)
+        return engine
+    return default_engine(backend or "auto")
+
+
+def _solve_cached(
+    problems, backend: Optional[str], engine, split_regimes: bool
+) -> np.ndarray:
+    """THE cached batched solve every public path shares: resolves the
+    engine (:func:`_resolve_engine`) and runs one blocking solve. Private —
+    callers go through :class:`repro.core.solver.Solver` (or the deprecated
+    shims below, which delegate here unchanged)."""
+    return _resolve_engine(backend, engine).solve(problems, split_regimes=split_regimes)
+
+
+def solve_dp_batch_cached(
+    problems, backend: Optional[str] = None, engine=None
+) -> np.ndarray:
+    """Deprecated shim: use ``Solver(engine=...).solve(problems,
+    algorithm="dp_batch")`` (the facade, DESIGN.md §15).
+
+    Batched DP solve through a sweep engine (the given one, else the shared
+    default for ``backend``); delegates to the same private implementation
+    the facade calls, so behavior — including the backend-vs-engine conflict
+    ValueError — is bit-identical."""
+    warn_deprecated(
+        "solve_dp_batch_cached", 'Solver(engine=...).solve(problems, algorithm="dp_batch")'
+    )
+    return _solve_cached(problems, backend, engine, split_regimes=False)
 
 
 def solve_schedule_batch_cached(
     problems, backend: Optional[str] = None, engine=None
 ) -> np.ndarray:
-    """Regime-dispatched batched solve through a sweep engine (DESIGN.md
-    §13): monotone instances ride the marginal fast path, only
-    arbitrary-regime instances pay the DP. Same engine/backend conventions
-    (and conflict check) as :func:`solve_dp_batch_cached`; returns
-    ``(B, n)`` int64 schedules in original problem order."""
-    if engine is not None:
-        if backend is not None and resolve_backend(backend) != engine.backend:
-            raise ValueError(
-                f"backend {backend!r} conflicts with engine.backend "
-                f"{engine.backend!r}; pass an engine built for that backend"
-            )
-        return engine.solve(problems, split_regimes=True)
-    return default_engine(backend or "auto").solve(problems, split_regimes=True)
+    """Deprecated shim: use ``Solver(engine=...).solve(problems)`` (the
+    facade, DESIGN.md §15).
+
+    Regime-dispatched batched solve (DESIGN.md §13): monotone instances ride
+    the marginal fast path, only arbitrary-regime instances pay the DP. Same
+    engine/backend conventions (and conflict check) as
+    :func:`solve_dp_batch_cached`; returns ``(B, n)`` int64 schedules in
+    original problem order — bit-identical to the pre-facade behavior."""
+    warn_deprecated(
+        "solve_schedule_batch_cached", "Solver(engine=...).solve(problems)"
+    )
+    return _solve_cached(problems, backend, engine, split_regimes=True)

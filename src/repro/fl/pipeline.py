@@ -42,6 +42,14 @@ traffic then merge into shared flushes and warm ONE compile cache
 inertly, exactly like the engine's own bucketing — so the executors'
 determinism contract above is unchanged.
 
+Frontier-mode planning (PR 7, DESIGN.md §15) keeps the same contract:
+``FederatedServer(frontier_mode=...)`` turns each ``plan_round`` into a
+batched ε-constraint sweep plus a deterministic frontier-point selection,
+but the deadline grid, the sweep, and the selection rule are all pure
+functions of the immutable estimator snapshot — so frontier-planned
+campaigns pipeline exactly like min-energy ones, bit-identical across
+executors.
+
 Overlap accounting: each PlanFuture records the planner time it consumed
 (``busy_s``) and the main-thread time spent blocked in ``result()``
 (``blocked_s``). The campaign's ``overlap_fraction`` is the share of

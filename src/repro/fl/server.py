@@ -40,8 +40,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.pareto import deadline_grid
 from ..core.problem import Problem, total_cost
-from ..core.scheduler import schedule
+from ..core.solver import Solver
 from ..core.sweep import SweepEngine, default_engine
 from ..optim.optimizers import Optimizer
 from .client import make_client_fn
@@ -65,6 +66,10 @@ class RoundPlan:
     T: int  # requested workload (pre-dropout-clipping)
     assignments: np.ndarray  # x_i, sums to the effective workload
     est_cost: float  # estimated Joules under the planning-time tables
+    # frontier-mode planning only (DESIGN.md §15): the ε-constraint deadline
+    # the chosen frontier point was solved under, and its achieved makespan.
+    deadline: Optional[float] = None
+    est_time: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -118,6 +123,9 @@ class FederatedServer:
         scenario_dropouts: Optional[Sequence[Sequence[int]]] = None,
         engine: Optional[SweepEngine] = None,
         service=None,
+        frontier_mode=None,
+        time_tables=None,
+        frontier_points: int = 12,
     ):
         """``round_T``: total mini-batches scheduled per round; ``None``
         defaults to half the round tensor's capacity (and can still be set
@@ -146,6 +154,17 @@ class FederatedServer:
         §14). ``engine=None`` then defaults to the service's engine so
         campaign cache accounting (``CampaignHistory.dp_cache_stats``)
         observes the shared cache.
+
+        ``frontier_mode``: picks each round's operating point from the LIVE
+        (energy, completion-time) Pareto frontier instead of a plain
+        min-energy solve — ``"knee"`` / ``"min_energy"`` / ``"min_time"``,
+        or a number (a round-time budget in seconds, resolved by
+        ε-constraint). Requires ``time_tables`` (per-client ``(U_i+1,)``
+        time arrays: seconds for client ``i`` to run ``j`` batches).
+        ``frontier_points`` bounds the per-round sweep batch
+        (:func:`~repro.core.pareto.deadline_grid` subsamples the exact
+        candidate set). Planning stays a pure function of the estimator
+        snapshot, so pipelined campaigns remain bit-identical.
         """
         self.params = init_params
         self.estimator = estimator
@@ -155,6 +174,14 @@ class FederatedServer:
         if engine is None and service is not None:
             engine = service.engine
         self.engine = engine if engine is not None else default_engine()
+        if frontier_mode is not None and time_tables is None:
+            raise ValueError("frontier_mode requires time_tables")
+        self.frontier_mode = frontier_mode
+        self.time_tables = None if time_tables is None else [
+            np.asarray(t, dtype=np.float64) for t in time_tables
+        ]
+        self.frontier_points = int(frontier_points)
+        self.solver = Solver(engine=self.engine, service=self.service)
         self.scenario_T_candidates = list(scenario_T_candidates or ())
         self.scenario_dropouts = [tuple(s) for s in (scenario_dropouts or ())]
         self.n_clients = len(estimator.fleet)
@@ -198,15 +225,35 @@ class FederatedServer:
     ) -> RoundPlan:
         """Planning stage: solve the schedule for ``est_problem`` (built via
         :meth:`build_problem` if not given). Deterministic in its inputs —
-        running it inline or on a planner thread yields the same plan."""
+        running it inline or on a planner thread yields the same plan (the
+        frontier path included: the grid, sweep, and point selection are all
+        pure functions of the immutable snapshot).
+
+        With ``frontier_mode`` set, the round's operating point comes from
+        the live Pareto frontier: one batched ε-constraint sweep over a
+        ``frontier_points``-sized deadline grid (ONE engine dispatch — or
+        one coalescable served request), then the configured selection rule
+        picks the round's (energy, time) trade-off."""
         if est_problem is None:
             est_problem = self.build_problem(T)
-        x = schedule(est_problem, self.algorithm)
+        if self.frontier_mode is not None:
+            grid = deadline_grid(est_problem, self.time_tables, self.frontier_points)
+            front = self.solver.frontier(est_problem, self.time_tables, grid)
+            pt = front.select(self.frontier_mode)
+            return RoundPlan(
+                round_index=round_index,
+                T=int(T),
+                assignments=np.asarray(pt.schedule),
+                est_cost=float(pt.energy),
+                deadline=float(pt.deadline),
+                est_time=float(pt.time),
+            )
+        sol = self.solver.solve(est_problem, algorithm=self.algorithm)
         return RoundPlan(
             round_index=round_index,
             T=int(T),
-            assignments=np.asarray(x),
-            est_cost=float(total_cost(est_problem, x)),
+            assignments=np.asarray(sol.schedule),
+            est_cost=float(sol.objective),
         )
 
     def train_round(self, plan: RoundPlan, batches) -> jnp.ndarray:
@@ -275,15 +322,14 @@ class FederatedServer:
         engine path (inert padding)."""
         if not problems:
             return None
-        if self.service is not None:
-            X = self.service.submit(problems, split_regimes=True).result()
-            X = X[:, : self.n_clients]
-        else:
-            X = self.engine.solve(problems, split_regimes=True)[:, : self.n_clients]
-        energies = np.array(
-            [total_cost(p, X[b]) for b, p in enumerate(problems)], dtype=np.float64
+        # the facade's batch path: regime-split through the engine, or ONE
+        # served request when a service is configured — same dispatch the
+        # pre-facade code made, so campaigns stay bit-identical
+        res = self.solver.solve(problems, check=False)
+        X = np.stack(res.schedules)  # every scenario spans the full fleet
+        return ScenarioReport(
+            labels=list(labels), assignments=X, energies=res.objectives
         )
-        return ScenarioReport(labels=list(labels), assignments=X, energies=energies)
 
     # ---- serial composition --------------------------------------------
 

@@ -10,6 +10,7 @@ demuxes per-request :class:`ScheduleFuture` results — with ahead-of-time
 
 from .coalesce import coalesce_key, combine_batches, pow2_ladder, warm_batch
 from .service import (
+    FrontierFuture,
     ScheduleFuture,
     SchedulerService,
     ServiceClosed,
@@ -17,6 +18,7 @@ from .service import (
 )
 
 __all__ = [
+    "FrontierFuture",
     "ScheduleFuture",
     "SchedulerService",
     "ServiceClosed",

@@ -43,11 +43,13 @@ from typing import Optional
 
 import numpy as np
 
+from ..core.pareto import assemble_frontier, candidate_deadlines, tightened_instances
 from ..core.problem import Problem, ProblemBatch
 from ..core.sweep import SweepEngine, _next_pow2, default_engine
 from .coalesce import coalesce_key, combine_batches, pow2_ladder, warm_batch
 
 __all__ = [
+    "FrontierFuture",
     "ScheduleFuture",
     "SchedulerService",
     "ServiceClosed",
@@ -129,6 +131,43 @@ class ScheduleFuture:
         self._wait(timeout)
         k = self._handle.k_last()[self._lo : self._hi]
         return k[0] if self._squeeze else k
+
+
+class FrontierFuture:
+    """A served Pareto-frontier request (PR 7, DESIGN.md §15): wraps the
+    underlying ε-constraint sweep's :class:`ScheduleFuture` and assembles
+    the pruned :class:`~repro.core.pareto.ParetoFrontier` on :meth:`result`.
+    The sweep itself is ONE coalescable request — every tightened instance
+    shares the base problem's bucket, so frontier traffic merges with any
+    other same-bucket traffic exactly like plain solves do."""
+
+    def __init__(self, future: ScheduleFuture, problem, time_tables, deadlines):
+        self._future = future
+        self._problem = problem
+        self._time_tables = time_tables
+        self._deadlines = deadlines
+        self._frontier = None
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    @property
+    def submitted_at(self):
+        return self._future.submitted_at
+
+    @property
+    def completed_at(self):
+        return self._future.completed_at
+
+    def result(self, timeout: Optional[float] = None):
+        """The :class:`~repro.core.pareto.ParetoFrontier`; blocks until the
+        sweep is served. Repeated calls return the same object."""
+        if self._frontier is None:
+            X = self._future.result(timeout)
+            self._frontier = assemble_frontier(
+                self._problem, self._time_tables, self._deadlines, X
+            )
+        return self._frontier
 
 
 class _Request:
@@ -261,6 +300,27 @@ class SchedulerService:
             if was_idle or sum(r.batch.B for r in bucket) >= self.max_batch:
                 self._cond.notify_all()
         return future
+
+    def submit_frontier(
+        self,
+        problem: Problem,
+        time_tables,
+        deadlines=None,
+        split_regimes: bool = True,
+        timeout: Optional[float] = None,
+    ) -> FrontierFuture:
+        """Admits a Pareto-frontier request: the ε-constraint sweep of
+        ``problem`` over ``deadlines`` (``None``: the exact candidate set —
+        :func:`~repro.core.pareto.candidate_deadlines`) as ONE coalescable
+        request. Returns a :class:`FrontierFuture` whose ``result()`` is the
+        pruned :class:`~repro.core.pareto.ParetoFrontier`. Same admission /
+        backpressure semantics as :meth:`submit`."""
+        if deadlines is None:
+            deadlines = candidate_deadlines(problem, time_tables)
+        deadlines = np.asarray(list(deadlines), dtype=np.float64)
+        tight = tightened_instances(problem, time_tables, deadlines)
+        future = self.submit(tight, split_regimes=split_regimes, timeout=timeout)
+        return FrontierFuture(future, problem, time_tables, deadlines)
 
     def warm(self, specs, batch_sizes=None, split_regimes: bool = False) -> int:
         """Ahead-of-time traces the executables that traffic of the given

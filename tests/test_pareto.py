@@ -1,0 +1,247 @@
+"""Bicriteria Pareto engine (PR 7, DESIGN.md §15).
+
+Claims under test:
+  * the one-dispatch frontier is the EXACT (time, energy) Pareto set — it
+    matches full enumeration of every feasible schedule on small instances;
+  * any weighted-sum optimum lies on the frontier (``solve_scalarized``),
+    and ε-constraint lookups (``constrain`` / ``solve_constrained``) return
+    the minimal-energy point meeting the bound;
+  * monotone-regime instances ride the marginal fast path
+    (``split_regimes=True``) and produce the same frontier as the fused DP;
+  * one frontier — and even all windows of a :class:`CostWindows` sweep —
+    costs exactly ONE engine dispatch;
+  * ``SweepHandle.frontier`` exposes the free workload-Pareto curve of the
+    final DP row;
+  * the serve layer's ``submit_frontier`` returns the same frontier as the
+    direct path, as one coalescable request.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostWindows,
+    Problem,
+    Solver,
+    SweepEngine,
+    pareto_frontier,
+    random_problem,
+    total_cost,
+)
+from repro.core.pareto import (
+    candidate_deadlines,
+    deadline_grid,
+    feasible_deadline_range,
+    frontier_by_window,
+    pareto_indices,
+    workload_frontier,
+)
+from repro.serve import SchedulerService
+
+
+def small_instance(seed=3, n=4, T=10):
+    """Instance tiny enough to enumerate every feasible schedule."""
+    rng = np.random.default_rng(seed)
+    p = random_problem(rng, n=n, T=T, regime="arbitrary", max_upper=6)
+    tt = [np.sort(rng.uniform(0.1, 2.0, int(u) + 1)) for u in p.upper]
+    for t in tt:
+        t[0] = 0.0
+    return p, tt
+
+
+def enumerate_pareto(p, tt):
+    """Ground truth by full enumeration: every feasible schedule's
+    (makespan, energy), pruned to the Pareto set."""
+    times, energies = [], []
+    ranges = [range(int(lo), int(hi) + 1) for lo, hi in zip(p.lower, p.upper)]
+    for x in itertools.product(*ranges):
+        if sum(x) != p.T:
+            continue
+        times.append(max(float(tt[i][j]) for i, j in enumerate(x)))
+        energies.append(float(total_cost(p, np.asarray(x))))
+    times, energies = np.asarray(times), np.asarray(energies)
+    idx = pareto_indices(times, energies)
+    return times[idx], energies[idx]
+
+
+def test_frontier_exact_vs_full_enumeration():
+    for seed in (3, 17, 29):
+        p, tt = small_instance(seed=seed)
+        front = pareto_frontier(p, tt)
+        bt, be = enumerate_pareto(p, tt)
+        assert np.array_equal(front.times, bt)
+        assert np.array_equal(front.energies, be)
+        # every frontier schedule is feasible and achieves its recorded pair
+        for pt in front:
+            assert pt.schedule.sum() == p.T
+            assert pt.time <= pt.deadline
+            assert pt.energy == pytest.approx(total_cost(p, pt.schedule), abs=0)
+        # sorted time-ascending, energy strictly decreasing (pruned)
+        assert np.all(np.diff(front.times) > 0)
+        assert np.all(np.diff(front.energies) < 0)
+
+
+def test_weighted_sum_optima_lie_on_frontier():
+    p, tt = small_instance(seed=5, n=5, T=12)
+    solver = Solver()
+    front = solver.frontier(p, tt)
+    weights = [(w, 1.0 - w) for w in np.linspace(0.0, 1.0, 9)]
+    pts = solver.solve_scalarized(p, tt, weights)
+    pairs = {(q.time, q.energy) for q in front}
+    for pt in pts:
+        assert (pt.time, pt.energy) in pairs
+    # the pure-preference corners resolve to the frontier endpoints
+    assert front.scalarize(1.0, 0.0) is front.min_energy()
+    assert front.scalarize(0.0, 1.0) is front.min_time()
+    with pytest.raises(ValueError):
+        front.scalarize(0.0, 0.0)
+
+
+def test_epsilon_constraint_lookups():
+    p, tt = small_instance(seed=18, n=5, T=12)
+    solver = Solver()
+    front = solver.frontier(p, tt)
+    assert len(front) >= 4, "degenerate frontier — pick another seed"
+    mid_t = 0.5 * (front.times[0] + front.times[-1])
+    pt = front.constrain(T_max=mid_t)
+    assert pt.time <= mid_t
+    # minimal energy among the feasible points
+    feas = front.energies[front.times <= mid_t]
+    assert pt.energy == feas.min()
+    # the symmetric bound: minimal time under an energy budget
+    mid_e = 0.5 * (front.energies[0] + front.energies[-1])
+    qt = front.constrain(E_max=mid_e)
+    assert qt.energy <= mid_e
+    assert qt.time == front.times[front.energies <= mid_e].min()
+    # facade spelling returns the same points
+    assert solver.solve_constrained(p, tt, T_max=mid_t).energy == pt.energy
+    assert solver.solve_constrained(p, tt, E_max=mid_e).time == qt.time
+    with pytest.raises(ValueError):
+        front.constrain(T_max=front.times[0] * 0.5)  # tighter than min_time
+    with pytest.raises(ValueError):
+        front.constrain(E_max=front.energies[-1] * 0.5)
+    with pytest.raises(ValueError):
+        front.constrain()  # exactly one bound required
+    with pytest.raises(ValueError):
+        front.constrain(T_max=1.0, E_max=1.0)
+
+
+def test_select_modes():
+    p, tt = small_instance(seed=18, n=5, T=12)
+    front = pareto_frontier(p, tt)
+    assert front.select("min_time") is front.min_time()
+    assert front.select("min_energy") is front.min_energy()
+    assert front.select("knee") is front.knee()
+    budget = float(front.times[-1])
+    assert front.select(budget) is front.min_energy()  # loosest budget
+    with pytest.raises(ValueError):
+        front.select("fastest-ish")
+
+
+def test_monotone_fast_path_matches_dp():
+    rng = np.random.default_rng(41)
+    for regime in ("increasing", "decreasing", "linear"):
+        p = random_problem(rng, n=5, T=14, regime=regime, max_upper=8)
+        tt = [np.sort(rng.uniform(0.1, 2.0, int(u) + 1)) for u in p.upper]
+        for t in tt:
+            t[0] = 0.0
+        fast = pareto_frontier(p, tt, split_regimes=True)
+        dp = pareto_frontier(p, tt, split_regimes=False)
+        assert np.array_equal(fast.times, dp.times)
+        # optimal ENERGIES agree (schedules may differ only between ties)
+        np.testing.assert_allclose(fast.energies, dp.energies, rtol=0, atol=1e-9)
+
+
+def test_frontier_is_one_dispatch():
+    p, tt = small_instance(seed=13, n=5, T=12)
+    eng = SweepEngine()
+    before = eng.cache_stats()
+    front = pareto_frontier(p, tt, engine=eng)
+    after = eng.cache_stats()
+    assert (after["hits"] + after["misses"]) - (before["hits"] + before["misses"]) == 1
+    assert front.num_swept == len(candidate_deadlines(p, tt))
+
+    # time-varying costs: ALL windows x ALL points still one dispatch
+    windows = CostWindows.from_carbon_intensities(
+        ("night", "midday", "evening"),
+        np.asarray([[100.0] * p.n, [50.0] * p.n, [200.0] * p.n]),
+    )
+    before = eng.cache_stats()
+    fronts = frontier_by_window(p, tt, windows, engine=eng)
+    after = eng.cache_stats()
+    assert (after["hits"] + after["misses"]) - (before["hits"] + before["misses"]) == 1
+    assert set(fronts) == {"night", "midday", "evening"}
+    for label, f in fronts.items():
+        assert all(pt.label == label for pt in f)
+    # uniform multipliers scale energies but cannot move the frontier's
+    # time axis or its schedule structure
+    assert np.array_equal(fronts["night"].times, fronts["evening"].times)
+    np.testing.assert_allclose(
+        fronts["evening"].energies, 2.0 * fronts["night"].energies, rtol=1e-12
+    )
+
+
+def test_cost_windows_validation_and_carbon_math():
+    with pytest.raises(ValueError):
+        CostWindows(labels=("a",), multipliers=np.asarray([[1.0, -0.5]]))
+    with pytest.raises(ValueError):
+        CostWindows(labels=("a", "b"), multipliers=np.asarray([[1.0, 1.0]]))
+    w = CostWindows.from_carbon_intensities(("w",), np.asarray([[360.0, 720.0]]))
+    # g/kWh * (mg/g) / (J/kWh) = mg per J
+    np.testing.assert_allclose(w.multipliers[0], [0.1, 0.2])
+    p, _ = small_instance(seed=3, n=2, T=4)
+    (wp,) = w.apply(p)
+    np.testing.assert_allclose(wp.cost_tables[0], 0.1 * p.cost_tables[0])
+    np.testing.assert_allclose(wp.cost_tables[1], 0.2 * p.cost_tables[1])
+
+
+def test_candidate_deadlines_and_grid():
+    p, tt = small_instance(seed=21, n=5, T=12)
+    cands = candidate_deadlines(p, tt)
+    lo, hi = feasible_deadline_range(p, tt)
+    assert lo == cands[0] and hi == cands[-1]
+    assert np.all(np.diff(cands) > 0)
+    # every candidate is an actual time-table value (a staircase breakpoint)
+    table_vals = {float(v) for t in tt for v in t}
+    assert all(float(d) in table_vals for d in cands)
+    grid = deadline_grid(p, tt, points=4)
+    assert len(grid) <= 4
+    assert grid[0] == cands[0] and grid[-1] == cands[-1]
+    assert set(grid).issubset(set(cands))
+    # a grid frontier is a subset of the exact frontier
+    exact = pareto_frontier(p, tt)
+    sub = pareto_frontier(p, tt, grid)
+    pairs = {(q.time, q.energy) for q in exact}
+    assert all((pt.time, pt.energy) in pairs for pt in sub)
+
+
+def test_sweep_handle_workload_frontier():
+    p, _ = small_instance(seed=7, n=4, T=8)
+    eng = SweepEngine()
+    handle = eng.dispatch([p], split_regimes=False)
+    idx, energies = handle.frontier(0)
+    k_row = np.asarray(handle.k_last())[0]
+    assert np.all(np.diff(idx) > 0)  # workload strictly ascending
+    assert np.all(np.diff(energies) > 0)  # energy strictly increasing
+    np.testing.assert_array_equal(energies, k_row[idx])
+    ref_idx, ref_e = workload_frontier(k_row)
+    np.testing.assert_array_equal(idx, ref_idx)
+    np.testing.assert_array_equal(energies, ref_e)
+
+
+def test_served_frontier_matches_direct():
+    p, tt = small_instance(seed=31, n=5, T=12)
+    eng = SweepEngine()
+    direct = pareto_frontier(p, tt, engine=eng, split_regimes=False)
+    with SchedulerService(engine=eng, max_batch=64, max_delay_s=0.005) as svc:
+        fut = svc.submit_frontier(p, tt, split_regimes=False)
+        served = fut.result(timeout=300)
+        assert fut.done()
+        assert served is fut.result()  # cached on the future
+        # a Solver built on the service takes the same path
+        via_solver = Solver(service=svc).frontier(p, tt, split_regimes=False)
+    for f in (served, via_solver):
+        assert np.array_equal(f.times, direct.times)
+        assert np.array_equal(f.energies, direct.energies)

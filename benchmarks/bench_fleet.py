@@ -1,0 +1,142 @@
+"""Hierarchical fleet-scale scheduling benchmark (DESIGN.md §16).
+
+Two legs, written to ``BENCH_fleet.json``:
+
+  * **gap leg** (n <= 64) — the clustered two-level solve vs the flat DP
+    optimum, solved by the same warm engine. Headline ``fleet_gap_pct``
+    (CI ceiling: <= 5%). The flat DP is the in-bench oracle: the clustered
+    objective must never beat it, must stay within the self-reported
+    ``gap_bound``, and singleton clustering at quantum=1 must match it to
+    float tolerance — any violation crashes the smoke, which fails CI.
+  * **throughput leg** (n = 2048+) — warm end-to-end ``solve_fleet`` rate
+    in clients/second. Headline ``fleet_throughput_n2048`` (CI floor,
+    conservative: box-load swings).
+
+Run as::
+
+    PYTHONPATH=src python benchmarks/bench_fleet.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+GAP_CASES = (
+    # (seed, n, T, clusters, quantum) — auto params where None
+    (0, 16, 40, 16, 1),  # singleton clustering: must be exact
+    (1, 32, 80, None, None),
+    (2, 48, 120, 6, 2),
+    (3, 64, 160, None, None),
+    (4, 64, 192, 8, 3),
+)
+
+
+def _gap_leg():
+    from repro.core import Solver, SweepEngine, random_problem, solve_fleet
+
+    eng = SweepEngine()
+    flat_solver = Solver(engine=eng)
+    rows = []
+    for seed, n, T, k, q in GAP_CASES:
+        p = random_problem(np.random.default_rng(seed), n=n, T=T)
+        fsol = solve_fleet(p, engine=eng, clusters=k, quantum=q)
+        flat = float(flat_solver.solve([p], algorithm="dp_batch").objectives[0])
+        scale = max(abs(flat), 1.0)
+        gap_pct = max(0.0, (fsol.objective - flat) / scale) * 100.0
+
+        # in-bench oracle parity: flat DP is optimal
+        assert fsol.objective >= flat - 1e-6 * scale, (
+            f"n={n}: clustered objective beats the flat DP optimum "
+            f"({fsol.objective} < {flat})"
+        )
+        assert fsol.objective <= flat * (1.0 + fsol.gap_bound) + 1e-6 * scale, (
+            f"n={n}: measured gap exceeds the certified bound "
+            f"({gap_pct:.3f}% vs bound {fsol.gap_bound * 100:.3f}%)"
+        )
+        if k == n and (q or 1) == 1:
+            assert abs(fsol.objective - flat) <= 1e-6 * scale, (
+                f"n={n}: singleton clustering at quantum=1 must be exact"
+            )
+        rows.append(
+            {
+                "n": n,
+                "T": T,
+                "clusters": fsol.num_clusters,
+                "quantum": fsol.quantum,
+                "flat_objective": flat,
+                "fleet_objective": fsol.objective,
+                "gap_pct": gap_pct,
+                "gap_bound_pct": fsol.gap_bound * 100.0,
+            }
+        )
+    return rows
+
+
+def _throughput_leg(n: int, repeats: int):
+    from repro.core import SweepEngine, random_problem, solve_fleet
+
+    p = random_problem(np.random.default_rng(42), n=n, T=4 * n, max_upper=64)
+    eng = SweepEngine()
+    fsol = solve_fleet(p, engine=eng, seed=0)  # cold: compiles
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        f2 = solve_fleet(p, engine=eng, seed=0)
+        times.append(time.perf_counter() - t0)
+        assert np.array_equal(f2.schedule, fsol.schedule), "warm re-solve drifted"
+    warm_s = float(np.median(times))
+    return {
+        "n": n,
+        "clusters": fsol.num_clusters,
+        "quantum": fsol.quantum,
+        "gap_bound_pct": fsol.gap_bound * 100.0,
+        "warm_solve_s": warm_s,
+        "clients_per_s": n / warm_s,
+        "compiles": eng.cache_stats()["compiles"],
+    }
+
+
+def run_bench(throughput_n: int, repeats: int) -> dict:
+    gap_rows = _gap_leg()
+    tp = _throughput_leg(throughput_n, repeats)
+    return {
+        "gap_cases": gap_rows,
+        "fleet_gap_pct": max(r["gap_pct"] for r in gap_rows),
+        "throughput": tp,
+        "fleet_throughput_n2048": tp["clients_per_s"],
+    }
+
+
+def run():
+    """Harness entry point (benchmarks.run): gap sweep + one warm solve."""
+    r = run_bench(throughput_n=512, repeats=1)
+    tp = r["throughput"]
+    return [
+        (
+            f"fleet_solve_n{tp['n']}",
+            tp["warm_solve_s"] * 1e6,
+            f"gap<=5%: max measured {r['fleet_gap_pct']:.2f}%",
+        )
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small fast config for CI")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--n", type=int, default=None, help="throughput-leg fleet size")
+    args = ap.parse_args()
+
+    n = args.n or 2048
+    result = run_bench(throughput_n=n, repeats=2 if args.smoke else 5)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,9 +24,9 @@ import time
 import jax
 import numpy as np
 
+from repro import PlanPolicy, Solver
 from repro.configs.base import ModelConfig
 from repro.data import client_corpora, make_lm_examples
-from repro.core import Solver
 from repro.fl import EnergyEstimator, FederatedServer, make_fleet, run_campaign
 from repro.models import init_params, loss_fn, param_count
 from repro.optim import sgd
@@ -92,9 +92,11 @@ def main():
             init_params=init_params(cfg, jax.random.PRNGKey(seed)),
             client_optimizer=sgd(args.lr),
             estimator=est,
-            algorithm=algorithm,
-            frontier_mode=frontier_mode if algorithm != "uniform" else None,
-            time_tables=time_tables,
+            policy=PlanPolicy(
+                algorithm=algorithm,
+                frontier_mode=frontier_mode if algorithm != "uniform" else None,
+                time_tables=time_tables,
+            ),
         )
         T = sum(d.max_batches for d in fleet) // 2
 

@@ -5,7 +5,8 @@
 
 import numpy as np
 
-from repro.core import Solver, device_fleet_problem
+from repro import Solver
+from repro.core import device_fleet_problem, random_problem
 
 
 def main():
@@ -43,6 +44,18 @@ def main():
     x_uni = solver.solve(problem, algorithm="uniform")
     save = 100 * (1 - opt.objective / x_uni.objective)
     print(f"\nenergy saved vs uniform split: {save:.1f}%")
+
+    # fleet scale (DESIGN.md §16): at hundreds+ of clients, solve_fleet
+    # clusters similar cost profiles, solves each cluster once, and splits
+    # the round's workload across clusters with a small exact knapsack —
+    # returning a per-client schedule plus a certified optimality-gap bound
+    big = random_problem(rng, n=256, T=512, max_upper=16)
+    fsol = solver.solve_fleet(big)
+    print(
+        f"\nfleet scale: n=256 clients -> {fsol.num_clusters} clusters "
+        f"(quantum {fsol.quantum}), energy {fsol.objective:.1f} J, "
+        f"certified gap <= {fsol.gap_bound * 100:.2f}%"
+    )
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # CI entry point: dev deps (best-effort — tier-1 runs without network thanks
 # to tests/_hypothesis_fallback.py), lint, tier-1 tests, the perf smokes
-# (BENCH_batch/sweep/async/kernels/marginal/serve/pareto.json), and the
-# regression gate (scripts/check_bench.py) against the committed baselines.
+# (BENCH_batch/sweep/async/kernels/marginal/serve/pareto/fleet.json), the
+# examples under -W error::DeprecationWarning, and the regression gate
+# (scripts/check_bench.py) against the committed baselines.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -71,8 +72,27 @@ if ! python benchmarks/bench_pareto.py --smoke --out BENCH_pareto.json; then
   echo "ci.sh: FAIL — bench_pareto.py perf smoke crashed" >&2
   exit 1
 fi
+if ! python benchmarks/bench_fleet.py --smoke --out BENCH_fleet.json; then
+  echo "ci.sh: FAIL — bench_fleet.py perf smoke crashed" >&2
+  exit 1
+fi
 
-# 6. regression gate: ratio metrics vs baseline (30% tolerance) + hard
+# 6. examples must run clean against the supported API: any
+#    DeprecationWarning (a legacy shim sneaking back into the docs-facing
+#    code paths) is an error
+for ex in examples/*.py; do
+  case "$(basename "$ex")" in
+    fl_energy_training.py) ex_args="--rounds 2 --clients 3 --layers 1 --d-model 32 --max-batches 2" ;;
+    *) ex_args="" ;;
+  esac
+  # shellcheck disable=SC2086
+  if ! python -W error::DeprecationWarning "$ex" $ex_args >/dev/null; then
+    echo "ci.sh: FAIL — example $ex crashed or emitted a DeprecationWarning" >&2
+    exit 1
+  fi
+done
+
+# 7. regression gate: ratio metrics vs baseline (30% tolerance) + hard
 #    floors. On GitHub Actions the trajectory tables are also appended to
 #    the step summary as a markdown dashboard.
 python scripts/check_bench.py --baseline-dir .bench_baseline \

@@ -1,0 +1,34 @@
+"""Minimal-energy FL scheduling — the public facade (PR 8).
+
+One import surface for the supported entrypoints: the :class:`Solver` verbs
+(``solve`` / ``sweep`` / ``frontier`` / ``solve_fleet``), their result types,
+the :class:`PlanPolicy` planning config, and the serving front-end. Anything
+deeper (``repro.core.*``, ``repro.fl.*``, ``repro.serve.*``) is either
+internal machinery or a deprecated warn-once shim —
+``tests/test_public_api.py`` freezes this surface so new entrypoints must
+land here deliberately.
+"""
+
+from .core import (
+    FleetSolution,
+    ParetoFrontier,
+    PlanPolicy,
+    Problem,
+    ProblemBatch,
+    Solution,
+    SolutionBatch,
+    Solver,
+)
+from .serve import SchedulerService
+
+__all__ = [
+    "FleetSolution",
+    "ParetoFrontier",
+    "PlanPolicy",
+    "Problem",
+    "ProblemBatch",
+    "SchedulerService",
+    "Solution",
+    "SolutionBatch",
+    "Solver",
+]

@@ -24,7 +24,13 @@ from .costs import (
     sublinear_cost,
     superlinear_cost,
 )
-from .jax_dp import solve_fused_batch_jax, solve_schedule_dp_batch, solve_schedule_dp_jax
+from .fleet import FleetSolution, PlanPolicy, cluster_clients, solve_fleet
+from .jax_dp import (
+    solve_fused_batch_jax,
+    solve_fused_batch_ring,
+    solve_schedule_dp_batch,
+    solve_schedule_dp_jax,
+)
 from .marginal import marco, mardec, mardecun, marin
 from .marginal_jax import (
     marco_batch,
@@ -124,6 +130,11 @@ __all__ = [
     "Solver",
     "Solution",
     "SolutionBatch",
+    "FleetSolution",
+    "PlanPolicy",
+    "cluster_clients",
+    "solve_fleet",
+    "solve_fused_batch_ring",
     "ParetoFrontier",
     "ParetoPoint",
     "pareto_frontier",

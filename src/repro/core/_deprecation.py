@@ -24,16 +24,18 @@ _WARNED: set = set()
 _LOCK = threading.Lock()
 
 
-def warn_deprecated(name: str, replacement: str) -> None:
+def warn_deprecated(name: str, replacement: str, module: str = "repro.core") -> None:
     """Fires ``DeprecationWarning`` for entrypoint ``name`` exactly once per
     process (repeat calls are silent — deterministic, unlike the interpreter's
-    per-call-site ``__warningregistry__`` dedup)."""
+    per-call-site ``__warningregistry__`` dedup). ``module`` labels where the
+    deprecated spelling lives (``repro.fl`` for the legacy ``FederatedServer``
+    kwargs, PR 8)."""
     with _LOCK:
         if name in _WARNED:
             return
         _WARNED.add(name)
     warnings.warn(
-        f"repro.core.{name} is deprecated; use {replacement} "
+        f"{module}.{name} is deprecated; use {replacement} "
         f"(the Solver facade, DESIGN.md §15) — behavior is bit-identical",
         DeprecationWarning,
         stacklevel=3,

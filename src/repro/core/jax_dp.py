@@ -35,6 +35,7 @@ __all__ = [
     "solve_schedule_dp_jax",
     "solve_schedule_dp_batch",
     "solve_fused_batch_jax",
+    "solve_fused_batch_ring",
     "dp_tables_jax",
     "dp_tables_batch_jax",
     "pack_problem",
@@ -103,20 +104,28 @@ def solve_schedule_dp_jax(problem: Problem, backend: str = "auto") -> np.ndarray
 # ---------------------------------------------------------------------------
 
 
-def _dp_tables_batch(costs: jnp.ndarray, T: int, backend: str = "ref"):
-    """Unjitted body of :func:`dp_tables_batch_jax` — the fused solver and
-    the sweep engine (``core/sweep.py``) close over this inside their own
-    per-bucket jits."""
+def _dp_scan_from(k0: jnp.ndarray, costs: jnp.ndarray, backend: str = "ref"):
+    """Continues the class scan from an arbitrary DP row ``k0 (B, T+1)`` over
+    the classes in ``costs (B, n, W)``. Factored out of
+    :func:`_dp_tables_batch` so the ring-sharded solver (below) can run each
+    device's local classes through the IDENTICAL op sequence — bit-identity
+    of the sharded path reduces to handing the row around the ring."""
 
     def step(krow, cost_i):
         kout, iout = minplus_step_batch(krow, cost_i, backend=backend)
         return kout, iout
 
+    # scan over the class axis: xs must lead with n
+    return jax.lax.scan(step, k0, jnp.swapaxes(costs, 0, 1))
+
+
+def _dp_tables_batch(costs: jnp.ndarray, T: int, backend: str = "ref"):
+    """Unjitted body of :func:`dp_tables_batch_jax` — the fused solver and
+    the sweep engine (``core/sweep.py``) close over this inside their own
+    per-bucket jits."""
     B = costs.shape[0]
     k0 = jnp.full((B, T + 1), BIG, jnp.float32).at[:, 0].set(0.0)
-    # scan over the class axis: xs must lead with n
-    k_last, I = jax.lax.scan(step, k0, jnp.swapaxes(costs, 0, 1))
-    return k_last, I
+    return _dp_scan_from(k0, costs, backend=backend)
 
 
 @functools.partial(jax.jit, static_argnames=("T", "backend"))
@@ -186,6 +195,77 @@ def solve_fused_batch_jax(costs: jnp.ndarray, t_star: jnp.ndarray, T: int, backe
     crosses a dispatch boundary and the second trace/launch disappears.
     """
     return _solve_fused_batch(costs, t_star, T, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Class-axis ring sharding (DESIGN.md §16): the DP scan is sequential in n,
+# so the row is handed around a device ring instead of split — device d holds
+# classes [d*n_loc, (d+1)*n_loc) and, on its turn, continues the row through
+# them with the SAME op sequence as the unsharded scan (bit-identical rows),
+# then passes the row on via ppermute. What shards is the per-device state:
+# each device keeps only ITS (n_loc, B, T+1) argmin slab — the memory wall of
+# very wide flat problems — and backtracking walks the ring in reverse,
+# handing the workload carry back. Compute is pipelined, not divided: every
+# turn is one device's scan segment, so wall-clock matches the unsharded scan
+# while peak argmin memory per device drops by the ring size.
+# ---------------------------------------------------------------------------
+
+
+def _ring_dp_body(costs_l, k0, t_star, *, T, backend, axis, ndev):
+    """Per-device shard_map body: ``costs_l (B, n_loc, W)`` local classes,
+    ``k0 (B, T+1)`` / ``t_star (B,)`` replicated. Returns the local schedule
+    columns ``(B, n_loc)`` and the replicated final row ``(B, T+1)``."""
+    d = jax.lax.axis_index(axis)
+    fwd = [(i, (i + 1) % ndev) for i in range(ndev)]
+    bwd = [(i, (i - 1) % ndev) for i in range(ndev)]
+    row = k0
+    I_loc = None
+    for r in range(ndev):  # static unroll: one turn per ring position
+        new_row, I_r = _dp_scan_from(row, costs_l, backend=backend)
+        mine = d == r
+        I_loc = I_r if I_loc is None else jnp.where(mine, I_r, I_loc)
+        row = jnp.where(mine, new_row, row)
+        row = jax.lax.ppermute(row, axis, fwd)
+    # after n/ndev turns the ring hands the final row to device 0; masked
+    # psum broadcasts it (adding exact zeros — f32-exact) to every device
+    k_last = jax.lax.psum(jnp.where(d == 0, row, jnp.zeros_like(row)), axis)
+    # reverse ring: the workload carry t walks back through the devices,
+    # each backtracking through its own retained argmin slab
+    t = t_star.astype(jnp.int32)
+    x_loc = jnp.zeros(costs_l.shape[:2], jnp.int32)
+    for r in range(ndev - 1, -1, -1):
+        xb = _backtrack_batch(I_loc, t, T)
+        mine = d == r
+        x_loc = jnp.where(mine, xb, x_loc)
+        t = jnp.where(mine, t - xb.sum(axis=1).astype(jnp.int32), t)
+        t = jax.lax.ppermute(t, axis, bwd)
+    return x_loc, k_last
+
+
+def solve_fused_batch_ring(costs, t_star, T: int, backend: str, mesh, axis: str):
+    """Fused DP + backtrack with the CLASS axis sharded over ``mesh[axis]``
+    as a ring (see module comment above). Drop-in for
+    :func:`solve_fused_batch_jax` — same ``(X (B, n), K_last (B, T+1))``
+    contract, bit-identical results — with ``n`` divisible by the ring size
+    (the engine pads its n-bucket up to a multiple). Call under ``jax.jit``
+    (the sweep engine's bucket executables do)."""
+    from jax.experimental.shard_map import shard_map
+
+    ndev = int(mesh.shape[axis])
+    B = costs.shape[0]
+    k0 = jnp.full((B, T + 1), BIG, jnp.float32).at[:, 0].set(0.0)
+    P = jax.sharding.PartitionSpec
+    body = functools.partial(
+        _ring_dp_body, T=T, backend=backend, axis=axis, ndev=ndev
+    )
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, axis, None), P(None, None), P(None)),
+        out_specs=(P(None, axis), P(None, None)),
+        check_rep=False,
+    )
+    return fn(costs, k0, t_star.astype(jnp.int32))
 
 
 def solve_schedule_dp_batch(problems, backend: str = "auto") -> np.ndarray:

@@ -275,6 +275,56 @@ class Solver:
             cache_stats=self.engine.cache_stats(),
         )
 
+    # ---- fleet ---------------------------------------------------------
+
+    def solve_fleet(
+        self,
+        problem: Problem,
+        *,
+        clusters=None,
+        quantum: Optional[int] = None,
+        seed: Optional[int] = None,
+        time_tables=None,
+        policy=None,
+        check: bool = True,
+    ):
+        """Two-level fleet solve (DESIGN.md §16): cluster the clients, solve
+        every cluster's workload-Pareto curve in one batched dispatch, run an
+        exact top-level (MC)²MKP over the curves, then one regime-split
+        dispatch for the per-cluster schedules. Scales ``n`` into the
+        thousands; returns a :class:`~repro.core.fleet.FleetSolution` with a
+        certified relative ``gap_bound`` (0 when ``quantum == 1`` — the
+        decomposition is exact then).
+
+        ``clusters``: cluster count (``None``/"auto" ≈ √n); ``quantum``:
+        top-level curve sampling step (``None`` = auto, 1 = exact);
+        ``seed``: k-means seed; ``time_tables``: optional per-client time
+        tables folded into the clustering features. A
+        :class:`~repro.core.fleet.PlanPolicy` supplies defaults for any
+        argument not given explicitly. Runs over this solver's substrate:
+        direct engine dispatches, or coalescable served requests when the
+        solver was built over a :class:`~repro.serve.service.SchedulerService`.
+        """
+        from .fleet import FleetRun  # lazy: fleet imports sweep
+
+        if policy is not None:
+            clusters = clusters if clusters is not None else policy.fleet_clusters
+            quantum = quantum if quantum is not None else policy.fleet_quantum
+            seed = seed if seed is not None else policy.fleet_seed
+            time_tables = (
+                time_tables if time_tables is not None else policy.time_tables
+            )
+        return FleetRun(
+            problem,
+            engine=None if self.service is not None else self.engine,
+            service=self.service,
+            clusters=clusters,
+            quantum=quantum,
+            seed=0 if seed is None else int(seed),
+            time_tables=time_tables,
+            check=check,
+        ).finish()
+
     # ---- frontier ------------------------------------------------------
 
     def frontier(

@@ -56,7 +56,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..kernels.ops import resolve_backend
 from ._deprecation import warn_deprecated
-from .jax_dp import _solve_fused_batch, pack_problem
+from .jax_dp import _solve_fused_batch, pack_problem, solve_fused_batch_ring
 from .marginal_jax import (
     MARGINAL_BATCH_ALGORITHMS,
     marginal_select,
@@ -316,6 +316,15 @@ class SweepEngine:
         of that axis size.
       mesh_axis: mesh axis name to shard ``B`` over (default: the mesh's
         first axis).
+      ring_mesh: optional ``jax.sharding.Mesh``; when set, pure-DP buckets
+        shard the CLASS axis ``n`` as a device ring instead
+        (:func:`~repro.core.jax_dp.solve_fused_batch_ring`, DESIGN.md §16):
+        the DP row is handed around the ring while each device retains only
+        its own ``(n/D, B, T+1)`` argmin slab — bit-identical to the
+        unsharded scan, with per-device argmin memory divided by the ring
+        size. For ONE very wide problem (large ``n``); mutually exclusive
+        with ``mesh`` (large ``B``).
+      ring_axis: ring mesh axis name (default: the ring mesh's first axis).
     """
 
     def __init__(
@@ -324,14 +333,28 @@ class SweepEngine:
         max_entries: int = 64,
         mesh=None,
         mesh_axis: Optional[str] = None,
+        ring_mesh=None,
+        ring_axis: Optional[str] = None,
     ):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
+        if mesh is not None and ring_mesh is not None:
+            raise ValueError(
+                "mesh (batch-axis sharding) and ring_mesh (class-axis ring) "
+                "are mutually exclusive — build one engine per strategy"
+            )
         self.backend = resolve_backend(backend)
         self.max_entries = int(max_entries)
         self.mesh = mesh
         self.mesh_axis = mesh_axis or (mesh.axis_names[0] if mesh is not None else None)
         self._ndev = int(mesh.shape[self.mesh_axis]) if mesh is not None else 1
+        self.ring_mesh = ring_mesh
+        self.ring_axis = ring_axis or (
+            ring_mesh.axis_names[0] if ring_mesh is not None else None
+        )
+        self._ring_ndev = (
+            int(ring_mesh.shape[self.ring_axis]) if ring_mesh is not None else 1
+        )
         self._cache: OrderedDict = OrderedDict()
         self._hits = self._misses = self._compiles = self._evictions = 0
         self._bucket_hits: dict = {}  # bucket key -> warm-hit count
@@ -406,6 +429,7 @@ class SweepEngine:
             return jax.jit(run_sel)
 
         _, _, _, Tb, _ = key
+        ring_mesh, ring_axis = self.ring_mesh, self.ring_axis
 
         def run(costs, t_star):
             # Trace-time side effect: executes once per XLA compilation of
@@ -413,6 +437,12 @@ class SweepEngine:
             # unless the entry is evicted and rebuilt).
             with self._lock:
                 self._compiles += 1
+            if ring_mesh is not None:
+                # class-axis ring (DESIGN.md §16): bit-identical rows, argmin
+                # slab sharded over the ring devices
+                return solve_fused_batch_ring(
+                    costs, t_star, Tb, backend, ring_mesh, ring_axis
+                )
             # fused DP + backtrack (DESIGN.md §12): one dispatch, and only
             # (X, K_last) leave the program — never the (n, B, T+1) argmins
             return _solve_fused_batch(costs, t_star, Tb, backend=backend)
@@ -424,6 +454,10 @@ class SweepEngine:
     def _dispatch_dp(self, batch: ProblemBatch) -> SweepHandle:
         b0 = remove_lower_limits(batch)
         nb, Tb, Wb = _bucket_axes(b0)  # same math the coalescer keys on
+        if nb % self._ring_ndev:
+            # the ring splits the class axis evenly; pad the n-bucket up to a
+            # multiple of the ring size (phantom classes are inert)
+            nb = ((nb + self._ring_ndev - 1) // self._ring_ndev) * self._ring_ndev
         Bb = _next_pow2(b0.B)
         if Bb % self._ndev:
             Bb = ((Bb + self._ndev - 1) // self._ndev) * self._ndev

@@ -13,6 +13,7 @@ from .rounds import run_campaign
 from .server import (
     FederatedServer,
     FLRoundResult,
+    PlanPolicy,
     RoundPlan,
     ScenarioReport,
     apply_dropout,
@@ -20,7 +21,7 @@ from .server import (
 
 __all__ = [
     "local_train", "make_client_fn", "DeviceProfile", "EnergyEstimator",
-    "make_fleet", "FederatedServer", "FLRoundResult", "RoundPlan",
+    "make_fleet", "FederatedServer", "FLRoundResult", "PlanPolicy", "RoundPlan",
     "ScenarioReport", "apply_dropout", "CampaignHistory", "run_campaign",
     "AsyncCampaignRunner", "CampaignRunner", "PipelineStats", "PlanFuture",
     "SerialPlanExecutor", "ThreadPlanExecutor",

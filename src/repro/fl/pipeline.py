@@ -43,12 +43,17 @@ inertly, exactly like the engine's own bucketing — so the executors'
 determinism contract above is unchanged.
 
 Frontier-mode planning (PR 7, DESIGN.md §15) keeps the same contract:
-``FederatedServer(frontier_mode=...)`` turns each ``plan_round`` into a
+``PlanPolicy(frontier_mode=...)`` turns each ``plan_round`` into a
 batched ε-constraint sweep plus a deterministic frontier-point selection,
 but the deadline grid, the sweep, and the selection rule are all pure
 functions of the immutable estimator snapshot — so frontier-planned
 campaigns pipeline exactly like min-energy ones, bit-identical across
-executors.
+executors. Fleet-mode planning (PR 8, DESIGN.md §16) joins it:
+``PlanPolicy(fleet_clusters=...)`` swaps each ``plan_round`` for the
+two-level cluster-then-allocate solve, whose k-means seeding and greedy
+residual repair are deterministic in the snapshot and
+``policy.fleet_seed`` — thousands-of-client rounds pipeline with the same
+bit-identity guarantee.
 
 Overlap accounting: each PlanFuture records the planner time it consumed
 (``busy_s``) and the main-thread time spent blocked in ``result()``

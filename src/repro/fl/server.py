@@ -34,27 +34,32 @@ reference semantics the async pipeline must reproduce bit-identically.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core._deprecation import warn_deprecated
+from ..core.fleet import PlanPolicy
 from ..core.pareto import deadline_grid
 from ..core.problem import Problem, total_cost
 from ..core.solver import Solver
-from ..core.sweep import SweepEngine, default_engine
+from ..core.sweep import default_engine
 from ..optim.optimizers import Optimizer
 from .client import make_client_fn
 from .energy import EnergyEstimator
 
 __all__ = [
     "FLRoundResult",
+    "PlanPolicy",
     "RoundPlan",
     "ScenarioReport",
     "FederatedServer",
     "apply_dropout",
 ]
+
+_UNSET = object()  # sentinel: distinguishes "legacy kwarg passed" from default
 
 
 @dataclasses.dataclass
@@ -116,78 +121,111 @@ class FederatedServer:
         init_params: Any,
         client_optimizer: Optimizer,
         estimator: EnergyEstimator,
-        algorithm: str = "auto",
-        participation_floor: Optional[int] = None,
-        round_T: Optional[int] = None,
-        scenario_T_candidates: Optional[Sequence[int]] = None,
-        scenario_dropouts: Optional[Sequence[Sequence[int]]] = None,
-        engine: Optional[SweepEngine] = None,
-        service=None,
-        frontier_mode=None,
-        time_tables=None,
-        frontier_points: int = 12,
+        policy: Optional[PlanPolicy] = None,
+        algorithm=_UNSET,
+        participation_floor=_UNSET,
+        round_T=_UNSET,
+        scenario_T_candidates=_UNSET,
+        scenario_dropouts=_UNSET,
+        engine=_UNSET,
+        service=_UNSET,
+        frontier_mode=_UNSET,
+        time_tables=_UNSET,
+        frontier_points=_UNSET,
     ):
-        """``round_T``: total mini-batches scheduled per round; ``None``
-        defaults to half the round tensor's capacity (and can still be set
-        later, e.g. by :func:`repro.fl.rounds.run_campaign`).
+        """Planning configuration lives in ``policy`` — a
+        :class:`~repro.core.fleet.PlanPolicy` (PR 8's API consolidation):
 
-        ``scenario_T_candidates`` / ``scenario_dropouts`` enable the per-round
-        scenario-planning hook: alternative workloads and client-dropout
-        subsets are evaluated against the CURRENT energy estimates via one
-        batched DP solve and attached to each :class:`FLRoundResult`.
+        * ``policy.round_T``: total mini-batches scheduled per round;
+          ``None`` defaults to half the round tensor's capacity (and can
+          still be set later, e.g. by :func:`repro.fl.rounds.run_campaign`).
+        * ``policy.scenario_T_candidates`` / ``policy.scenario_dropouts``
+          enable the per-round scenario-planning hook: alternative workloads
+          and client-dropout subsets are evaluated against the CURRENT
+          energy estimates via one batched DP solve and attached to each
+          :class:`FLRoundResult`.
+        * ``policy.engine``: the :class:`~repro.core.sweep.SweepEngine` all
+          batched DP solves route through (``None``: the process-wide
+          default). Round shapes repeat while only the cost *values* drift,
+          so round 1 compiles the DP and every later round reuses the warm
+          executable (inspect via ``server.engine.cache_stats()``).
+        * ``policy.service``: an optional
+          :class:`~repro.serve.service.SchedulerService`. When set, scenario
+          batches are SUBMITTED to the service instead of dispatched
+          directly (DESIGN.md §14); ``engine=None`` then defaults to the
+          service's engine so campaign cache accounting observes the shared
+          cache.
+        * ``policy.frontier_mode``: picks each round's operating point from
+          the LIVE (energy, completion-time) Pareto frontier — ``"knee"`` /
+          ``"min_energy"`` / ``"min_time"``, or a round-time budget in
+          seconds (ε-constraint). Requires ``policy.time_tables``;
+          ``policy.frontier_points`` bounds the per-round sweep batch.
+        * ``policy.fleet_clusters``: switches round planning to the
+          two-level fleet path (DESIGN.md §16) —
+          :meth:`~repro.core.solver.Solver.solve_fleet` with
+          ``policy.fleet_quantum`` / ``policy.fleet_seed``. Planning remains
+          a pure function of the estimator snapshot (deterministic k-means),
+          so pipelined campaigns stay bit-identical.
 
-        ``engine``: the :class:`~repro.core.sweep.SweepEngine` all batched
-        DP solves route through (``None``: the process-wide default, whose
-        ``backend="auto"`` dispatches the min-plus kernel per hardware —
-        blocked jnp on CPU, tuned Pallas on TPU/GPU — and whose fused
-        executables return schedules without the argmin-matrix transfer).
-        Round
-        shapes repeat while only the cost *values* drift, so round 1
-        compiles the DP and every later round reuses the warm executable
-        (inspect via ``server.engine.cache_stats()``).
-
-        ``service``: an optional
-        :class:`~repro.serve.service.SchedulerService`. When set, scenario
-        batches are SUBMITTED to the service instead of dispatched directly
-        — campaign what-if planning coalesces with whatever other traffic
-        the service carries and shares its warm compile cache (DESIGN.md
-        §14). ``engine=None`` then defaults to the service's engine so
-        campaign cache accounting (``CampaignHistory.dp_cache_stats``)
-        observes the shared cache.
-
-        ``frontier_mode``: picks each round's operating point from the LIVE
-        (energy, completion-time) Pareto frontier instead of a plain
-        min-energy solve — ``"knee"`` / ``"min_energy"`` / ``"min_time"``,
-        or a number (a round-time budget in seconds, resolved by
-        ε-constraint). Requires ``time_tables`` (per-client ``(U_i+1,)``
-        time arrays: seconds for client ``i`` to run ``j`` batches).
-        ``frontier_points`` bounds the per-round sweep batch
-        (:func:`~repro.core.pareto.deadline_grid` subsamples the exact
-        candidate set). Planning stays a pure function of the estimator
-        snapshot, so pipelined campaigns remain bit-identical.
+        The pre-PR-8 constructor kwargs (``algorithm``, ``round_T``,
+        ``frontier_mode``, ...) still work bit-identically — each warns
+        ``DeprecationWarning`` once per process and is folded into a
+        ``PlanPolicy``. Passing both ``policy`` and legacy kwargs raises.
         """
+        legacy = {
+            name: val
+            for name, val in (
+                ("algorithm", algorithm),
+                ("participation_floor", participation_floor),
+                ("round_T", round_T),
+                ("scenario_T_candidates", scenario_T_candidates),
+                ("scenario_dropouts", scenario_dropouts),
+                ("engine", engine),
+                ("service", service),
+                ("frontier_mode", frontier_mode),
+                ("time_tables", time_tables),
+                ("frontier_points", frontier_points),
+            )
+            if val is not _UNSET
+        }
+        if legacy and policy is not None:
+            raise ValueError(
+                "pass either policy=PlanPolicy(...) or the legacy kwargs, "
+                f"not both (got legacy: {sorted(legacy)})"
+            )
+        if legacy:
+            for name in sorted(legacy):
+                warn_deprecated(
+                    f"FederatedServer({name}=...)",
+                    f"FederatedServer(policy=PlanPolicy({name}=...))",
+                    module="repro.fl",
+                )
+            policy = PlanPolicy(**legacy)
+        elif policy is None:
+            policy = PlanPolicy()
+        self.policy = policy
+
         self.params = init_params
         self.estimator = estimator
-        self.algorithm = algorithm
-        self.round_T = round_T
-        self.service = service
-        if engine is None and service is not None:
-            engine = service.engine
+        self.algorithm = policy.algorithm
+        self.round_T = policy.round_T
+        self.service = policy.service
+        engine = policy.engine
+        if engine is None and self.service is not None:
+            engine = self.service.engine
         self.engine = engine if engine is not None else default_engine()
-        if frontier_mode is not None and time_tables is None:
-            raise ValueError("frontier_mode requires time_tables")
-        self.frontier_mode = frontier_mode
-        self.time_tables = None if time_tables is None else [
-            np.asarray(t, dtype=np.float64) for t in time_tables
+        self.frontier_mode = policy.frontier_mode
+        self.time_tables = None if policy.time_tables is None else [
+            np.asarray(t, dtype=np.float64) for t in policy.time_tables
         ]
-        self.frontier_points = int(frontier_points)
+        self.frontier_points = int(policy.frontier_points)
         self.solver = Solver(engine=self.engine, service=self.service)
-        self.scenario_T_candidates = list(scenario_T_candidates or ())
-        self.scenario_dropouts = [tuple(s) for s in (scenario_dropouts or ())]
+        self.scenario_T_candidates = list(policy.scenario_T_candidates)
+        self.scenario_dropouts = [tuple(s) for s in policy.scenario_dropouts]
         self.n_clients = len(estimator.fleet)
-        if participation_floor is not None:
+        if policy.participation_floor is not None:
             for d in estimator.fleet:
-                d.min_batches = participation_floor
+                d.min_batches = policy.participation_floor
 
         client_fn = make_client_fn(loss_fn, client_optimizer)
 
@@ -236,6 +274,18 @@ class FederatedServer:
         picks the round's (energy, time) trade-off."""
         if est_problem is None:
             est_problem = self.build_problem(T)
+        if self.policy.fleet_clusters is not None:
+            # fleet-scale rounds (DESIGN.md §16): two-level cluster-then-
+            # allocate solve — still a pure function of the snapshot (the
+            # k-means is deterministic under policy.fleet_seed), so serial
+            # and pipelined campaigns stay bit-identical
+            fsol = self.solver.solve_fleet(est_problem, policy=self.policy)
+            return RoundPlan(
+                round_index=round_index,
+                T=int(T),
+                assignments=np.asarray(fsol.schedule),
+                est_cost=float(fsol.objective),
+            )
         if self.frontier_mode is not None:
             grid = deadline_grid(est_problem, self.time_tables, self.frontier_points)
             front = self.solver.frontier(est_problem, self.time_tables, grid)

@@ -10,6 +10,7 @@ demuxes per-request :class:`ScheduleFuture` results — with ahead-of-time
 
 from .coalesce import coalesce_key, combine_batches, pow2_ladder, warm_batch
 from .service import (
+    FleetFuture,
     FrontierFuture,
     ScheduleFuture,
     SchedulerService,
@@ -18,6 +19,7 @@ from .service import (
 )
 
 __all__ = [
+    "FleetFuture",
     "FrontierFuture",
     "ScheduleFuture",
     "SchedulerService",

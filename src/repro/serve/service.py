@@ -49,6 +49,7 @@ from ..core.sweep import SweepEngine, _next_pow2, default_engine
 from .coalesce import coalesce_key, combine_batches, pow2_ladder, warm_batch
 
 __all__ = [
+    "FleetFuture",
     "FrontierFuture",
     "ScheduleFuture",
     "SchedulerService",
@@ -168,6 +169,29 @@ class FrontierFuture:
                 self._problem, self._time_tables, self._deadlines, X
             )
         return self._frontier
+
+
+class FleetFuture:
+    """A served two-level fleet solve (PR 8, DESIGN.md §16): wraps a
+    :class:`~repro.core.fleet.FleetRun` whose stage-1 curve dispatch was
+    admitted as ONE coalescable request at submit time. :meth:`result` runs
+    the remaining stages — the top-level allocation and the per-cluster
+    schedule batch also go through the service, merging with any same-bucket
+    traffic — and returns the :class:`~repro.core.fleet.FleetSolution`.
+    Repeated calls return the same object."""
+
+    def __init__(self, run):
+        self._run = run
+
+    def done(self) -> bool:
+        """True once the stage-1 curve request has been served (the
+        remaining stages are small and run inside :meth:`result`)."""
+        return self._run.done()
+
+    def result(self, timeout: Optional[float] = None):
+        # timeout is accepted for API symmetry; the underlying staged
+        # requests block on the service's own flush cadence
+        return self._run.finish()
 
 
 class _Request:
@@ -321,6 +345,37 @@ class SchedulerService:
         tight = tightened_instances(problem, time_tables, deadlines)
         future = self.submit(tight, split_regimes=split_regimes, timeout=timeout)
         return FrontierFuture(future, problem, time_tables, deadlines)
+
+    def submit_fleet(
+        self,
+        problem: Problem,
+        *,
+        clusters=None,
+        quantum: Optional[int] = None,
+        seed: int = 0,
+        time_tables=None,
+        check: bool = True,
+    ) -> FleetFuture:
+        """Admits a two-level fleet solve (DESIGN.md §16): clusters the
+        clients on the calling thread (deterministic k-means), submits the
+        per-cluster curve batch as ONE coalescable request, and returns a
+        :class:`FleetFuture`. The top-level allocation and per-cluster
+        schedule stages run through the service too when ``result()`` is
+        called. Same knobs as
+        :meth:`repro.core.solver.Solver.solve_fleet`."""
+        from ..core.fleet import FleetRun  # lazy: fleet sits above the engine
+
+        return FleetFuture(
+            FleetRun(
+                problem,
+                service=self,
+                clusters=clusters,
+                quantum=quantum,
+                seed=seed,
+                time_tables=time_tables,
+                check=check,
+            )
+        )
 
     def warm(self, specs, batch_sizes=None, split_regimes: bool = False) -> int:
         """Ahead-of-time traces the executables that traffic of the given

@@ -1,0 +1,275 @@
+"""Fault-tolerant campaign runtime benchmark (DESIGN.md §17).
+
+Runs seeded chaos campaigns through the fault-injection harness and answers
+three questions, written to ``BENCH_faults.json``:
+
+  * **recovery exactness** (headline, CI floor == 1.0 via
+    scripts/check_bench.py): the fraction of recovered rounds whose
+    re-planned residual assignment is bit-identical to an INDEPENDENT
+    fault-free solve of the carried residual instance. Anything below 1.0
+    means mid-round recovery is not the exact solve it claims to be.
+  * **reactive re-plan overhead** (CI ceiling <= 15%): estimated Joules of
+    the reactive recovered round vs a clairvoyant ORACLE that knew the
+    faults in advance (same deliverable capacities, one solve). The gap is
+    the price of recovering after the fact instead of planning around the
+    failure — small because the residual instance is exact under the
+    paper's atomic-task model.
+  * **resilient serving**: the same chaos campaign driven through a
+    :class:`~repro.serve.SchedulerService` over a persistently flaky engine
+    with retry + circuit breaker + injected overload bursts — completes,
+    recovers, and reports the service's retry/degraded telemetry.
+
+Correctness is enforced in-bench (a violation crashes the smoke, which
+fails CI): recovery bit-identity per recovered round, serial == pipelined
+chaos histories (client-fault plans are data, not runtime randomness), and
+every campaign finishing all its rounds.
+
+Run as::
+
+    PYTHONPATH=src python benchmarks/bench_faults.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import time
+
+VOCAB, DIM, SEQ = 256, 64, 16
+
+
+def build_campaign(seed: int, n_clients: int, max_batches: int, engine=None, service=None):
+    """A fresh (server, examples, rng, T) tuple; same seed => same campaign,
+    so every leg consumes identical inputs."""
+    import jax
+    import numpy as np
+
+    from repro.core.sweep import SweepEngine
+    from repro.data import client_corpora, make_lm_examples
+    from repro.fl import EnergyEstimator, FederatedServer, PlanPolicy, make_fleet
+    from repro.fl.toy import make_tiny_lm
+    from repro.optim import sgd
+
+    tiny_lm_init, tiny_lm_loss = make_tiny_lm(VOCAB, DIM)
+    rng = np.random.default_rng(seed)
+    fleet = make_fleet(rng, n_clients, max_batches=max_batches)
+    est = EnergyEstimator(fleet)
+    est.calibrate(rng)
+    corpora = client_corpora(rng, n_clients, 4000, VOCAB)
+    examples = [make_lm_examples(c, SEQ) for c in corpora]
+    T = sum(d.max_batches for d in fleet) // 2
+    server = FederatedServer(
+        loss_fn=tiny_lm_loss,
+        init_params=tiny_lm_init(jax.random.PRNGKey(1)),
+        client_optimizer=sgd(0.3),
+        estimator=est,
+        policy=PlanPolicy(
+            engine=engine if engine is not None else SweepEngine(),
+            service=service,
+        ),
+    )
+    return server, examples, rng, T
+
+
+def _oracle_problem(ri):
+    """The clairvoyant instance: a scheduler that knew the round's faults in
+    advance plans once over the DELIVERABLE capacities — faulted clients cap
+    at what they actually banked, survivors keep their full range — for the
+    same effective workload the reactive path ended up scheduling."""
+    import numpy as np
+
+    from repro.core import Problem
+
+    p = ri.problem
+    faulty = set(ri.failed_clients) | set(ri.straggler_clients)
+    cap = np.array(
+        [
+            int(ri.completed[i]) if i in faulty else int(p.upper[i])
+            for i in range(p.n)
+        ],
+        dtype=np.int64,
+    )
+    T_eff = int(ri.completed.sum()) + int(ri.recovery_assignments.sum())
+    return Problem(
+        T=T_eff,
+        lower=np.minimum(p.lower, cap),
+        upper=cap,
+        cost_tables=tuple(p.cost_tables[i][: int(cap[i]) + 1] for i in range(p.n)),
+    )
+
+
+def _audit_recoveries(history, solver):
+    """Per recovered round: bit-identity of the recovery solve vs an
+    independent re-solve, and reactive-vs-oracle overhead on the
+    planning-time tables. Returns (n_recovered, n_exact, n_fallback,
+    overhead_pcts)."""
+    import numpy as np
+
+    from repro.core import total_cost
+
+    n_rec = n_exact = n_fb = 0
+    overheads = []
+    for r in history.rounds:
+        ri = r.recovery
+        if ri is None:
+            continue
+        n_rec += 1
+        if ri.fallback:
+            n_fb += 1
+        y_ref = np.asarray(solver.solve([ri.residual_problem]).schedules[0], np.int64)
+        if np.array_equal(ri.recovery_assignments, y_ref):
+            n_exact += 1
+        oracle = _oracle_problem(ri)
+        x_oracle = np.asarray(solver.solve([oracle]).schedules[0], np.int64)
+        oracle_J = float(total_cost(oracle, x_oracle))
+        reactive_J = float(total_cost(ri.problem, ri.completed + ri.recovery_assignments))
+        overheads.append(100.0 * max(0.0, reactive_J - oracle_J) / oracle_J)
+    return n_rec, n_exact, n_fb, overheads
+
+
+def run_bench(rounds: int, n_clients: int = 8, max_batches: int = 48, batch_size: int = 8, seed: int = 0) -> dict:
+    import numpy as np
+
+    from repro.core import CircuitBreaker, RetryPolicy, Solver
+    from repro.core.sweep import SweepEngine
+    from repro.fl import FaultInjector, FaultPlan, run_campaign
+    from repro.serve import SchedulerService
+
+    # client-fault-only plan for the serial==pipelined legs: engine-fault
+    # ordinals race across the planner thread, client faults are plan data
+    plan = FaultPlan.generate(
+        seed=seed + 100,
+        num_rounds=rounds,
+        n_clients=n_clients,
+        p_crash=0.25,
+        p_straggle=0.2,
+    )
+
+    server_s, examples, rng, T = build_campaign(seed, n_clients, max_batches)
+    t0 = time.perf_counter()
+    h_serial = run_campaign(
+        server_s, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        faults=plan,
+    )
+    serial_s = time.perf_counter() - t0
+
+    server_p, examples, rng, _ = build_campaign(seed, n_clients, max_batches)
+    t0 = time.perf_counter()
+    h_pipe = run_campaign(
+        server_p, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        faults=plan, pipelined=True,
+    )
+    pipelined_s = time.perf_counter() - t0
+
+    # chaos must not break determinism (DESIGN.md §17)
+    np.testing.assert_array_equal(h_serial.losses, h_pipe.losses)
+    assert h_serial.total_energy == h_pipe.total_energy
+    assert len(h_serial.rounds) == rounds
+
+    auditor = Solver(engine=SweepEngine())
+    n_rec, n_exact, n_fb, overheads = _audit_recoveries(h_serial, auditor)
+    assert n_rec > 0, "chaos plan produced no recoveries — raise the fault rates"
+    assert n_exact == n_rec, (
+        f"{n_rec - n_exact} recovered rounds diverge from the independent "
+        f"fault-free residual re-solve (recovery must be exact)"
+    )
+
+    # ---- resilient serving leg: flaky engine + retry + breaker + bursts --
+    fail_every = 7  # persistent enough to trip retries AND the breaker
+    flaky_plan = FaultPlan.generate(
+        seed=seed + 200,
+        num_rounds=rounds,
+        n_clients=n_clients,
+        p_crash=0.25,
+        p_straggle=0.2,
+        p_burst=0.5,
+        burst_size=4,
+    )
+    from repro.fl.faults import FlakyEngine
+
+    flaky = FlakyEngine(
+        SweepEngine(), fail_ordinals=range(0, 64 * rounds, fail_every)
+    )
+    service = SchedulerService(
+        engine=flaky,
+        max_delay_s=0.002,
+        retry=RetryPolicy(max_attempts=3),
+        breaker=CircuitBreaker(failure_threshold=3, cooldown_s=0.05),
+    )
+    injector = FaultInjector(flaky_plan)
+    server_v, examples, rng, _ = build_campaign(
+        seed, n_clients, max_batches, engine=flaky, service=service
+    )
+    t0 = time.perf_counter()
+    h_served = run_campaign(
+        server_v, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        faults=injector,
+    )
+    served_s = time.perf_counter() - t0
+    svc_stats = service.stats()
+    service.close()
+    assert len(h_served.rounds) == rounds, "served chaos campaign did not finish"
+    v_rec, v_exact, v_fb, v_over = _audit_recoveries(h_served, auditor)
+
+    total_rec = n_rec + v_rec
+    total_exact = n_exact + v_exact
+    all_over = overheads + v_over
+    summary = h_serial.summary()
+    out = {
+        "rounds": rounds,
+        "n_clients": n_clients,
+        "round_T": int(T),
+        "client_faults_planned": len(plan.client_faults),
+        "recovered_rounds": n_rec,
+        "fallback_rounds": n_fb,
+        "recovery_success_rate": total_exact / total_rec,
+        "replan_overhead_pct": float(np.mean(all_over)) if all_over else 0.0,
+        "replan_overhead_pct_max": float(np.max(all_over)) if all_over else 0.0,
+        "recovery_overhead_J": summary.get("recovery_overhead_J", 0.0),
+        "serial_total_s": serial_s,
+        "pipelined_total_s": pipelined_s,
+        "served": {
+            "total_s": served_s,
+            "recovered_rounds": v_rec,
+            "fallback_rounds": v_fb,
+            "engine_faults_injected": flaky.fault_stats()["injected_failures"],
+            "retries": svc_stats["retries"],
+            "flush_failures": svc_stats["flush_failures"],
+            "degraded_flushes": svc_stats["degraded_flushes"],
+            "degraded_rows": svc_stats["degraded_rows"],
+            "breaker": svc_stats["breaker"],
+        },
+    }
+    return out
+
+
+def run():
+    """Harness entry point (benchmarks.run): a short chaos campaign."""
+    r = run_bench(rounds=4, n_clients=6, max_batches=32, batch_size=4)
+    return [
+        (
+            f"faults_recovery_x{r['recovered_rounds']}",
+            r["serial_total_s"] / r["rounds"] * 1e3,
+            f"overhead={r['replan_overhead_pct']:.2f}% "
+            f"success={r['recovery_success_rate']:.0%}",
+        )
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small fast config for CI")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+
+    rounds = args.rounds or (5 if args.smoke else 10)
+    n_clients = 6 if args.smoke else 10
+    result = run_bench(rounds=rounds, n_clients=n_clients)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

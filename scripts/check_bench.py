@@ -86,6 +86,13 @@ GATED = {
     # certified gap_bound, singleton clustering exact) is asserted inside
     # the bench itself and crashes the smoke on violation.
     "BENCH_fleet.json": (),
+    # no baseline-ratio gating: the chaos campaign's wall-clock legs swing
+    # with box load like every other timing. The stable promises are the
+    # FLOOR on recovery_success_rate (exactness, == 1.0) and the CEILING on
+    # replan_overhead_pct below, plus the in-bench asserts (recovery
+    # bit-identity, serial == pipelined chaos histories, campaigns finish)
+    # that crash the smoke.
+    "BENCH_faults.json": (),
 }
 
 # Hard floors: benchmark file -> {metric: minimum}. These hold even on the
@@ -125,6 +132,10 @@ FLOORS = {
     # measured on idle-vs-loaded CPU — floor set far below to absorb
     # box-load swings on 2-core CI runners)
     "BENCH_fleet.json": {"fleet_throughput_n2048": 100.0},
+    # every recovered round's residual re-plan must be bit-identical to an
+    # independent fault-free solve of the carried residual instance
+    # (DESIGN.md §17) — exactness is a hard promise, not a ratio
+    "BENCH_faults.json": {"recovery_success_rate": 1.0},
 }
 
 # Hard ceilings: benchmark file -> {metric: maximum}. The dual of FLOORS,
@@ -135,6 +146,11 @@ CEILINGS = {
     # worst measured optimality gap of the clustered two-level solve vs the
     # flat DP at n <= 64 (ISSUE 8 acceptance: <= 5%; ~0-1.5% measured)
     "BENCH_fleet.json": {"fleet_gap_pct": 5.0},
+    # mean estimated-Joules overhead of reactive mid-round recovery vs the
+    # clairvoyant oracle re-plan (ISSUE 9 acceptance: <= 15%; ~0-2%
+    # measured — the residual instance is exact, so the only gap is work
+    # already sunk on clients the oracle would have avoided)
+    "BENCH_faults.json": {"replan_overhead_pct": 15.0},
 }
 
 

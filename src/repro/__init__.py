@@ -10,25 +10,34 @@ land here deliberately.
 """
 
 from .core import (
+    CircuitBreaker,
     FleetSolution,
     ParetoFrontier,
     PlanPolicy,
     Problem,
     ProblemBatch,
+    RetryPolicy,
     Solution,
     SolutionBatch,
     Solver,
+    TransientEngineError,
 )
+from .fl.faults import FaultInjector, FaultPlan
 from .serve import SchedulerService
 
 __all__ = [
+    "CircuitBreaker",
+    "FaultInjector",
+    "FaultPlan",
     "FleetSolution",
     "ParetoFrontier",
     "PlanPolicy",
     "Problem",
     "ProblemBatch",
+    "RetryPolicy",
     "SchedulerService",
     "Solution",
     "SolutionBatch",
     "Solver",
+    "TransientEngineError",
 ]

@@ -1,3 +1,13 @@
-from .checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
+from .checkpoint import (
+    latest_checkpoint,
+    load_checkpoint,
+    load_checkpoint_arrays,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "load_checkpoint_arrays",
+    "latest_checkpoint",
+]

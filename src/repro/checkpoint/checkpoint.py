@@ -15,7 +15,12 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "load_checkpoint_arrays",
+    "latest_checkpoint",
+]
 
 
 def _path_str(path) -> str:
@@ -60,6 +65,20 @@ def load_checkpoint(directory: str, step: int, like: Any):
         new_leaves.append(arr.astype(np.asarray(leaf).dtype).reshape(np.asarray(leaf).shape))
     tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), new_leaves)
     return tree, manifest
+
+
+def load_checkpoint_arrays(directory: str, step: int):
+    """Schema-driven restore: the raw ``{path: np.ndarray}`` mapping plus the
+    manifest, with no ``like`` tree required. For consumers whose restore
+    target is not a fixed pytree — e.g. the campaign checkpoints of
+    DESIGN.md §17, where the number of rounds (and whether a round carries
+    recovery provenance) is data, not structure."""
+    base = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    with np.load(base + ".npz") as data:
+        arrays = {k: data[k] for k in manifest["keys"]}
+    return arrays, manifest
 
 
 def latest_checkpoint(directory: str) -> int | None:

@@ -47,6 +47,13 @@ from .mc2mkp import (
     solve_mc2mkp,
     solve_schedule_dp,
 )
+from .resilience import (
+    CircuitBreaker,
+    RetryPolicy,
+    TransientEngineError,
+    is_transient,
+    retry_call,
+)
 from .problem import (
     Problem,
     ProblemBatch,
@@ -130,6 +137,11 @@ __all__ = [
     "Solver",
     "Solution",
     "SolutionBatch",
+    "CircuitBreaker",
+    "RetryPolicy",
+    "TransientEngineError",
+    "is_transient",
+    "retry_call",
     "FleetSolution",
     "PlanPolicy",
     "cluster_clients",

@@ -50,6 +50,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -100,6 +101,10 @@ class PlanPolicy:
     fleet_clusters: Optional[object] = None  # int | "auto" | None
     fleet_quantum: Optional[int] = None
     fleet_seed: int = 0
+    # a repro.core.resilience.RetryPolicy: the server's Solver retries
+    # transient engine failures during round planning (DESIGN.md §17);
+    # None = fail fast (the campaign loop still has its own re-plan path)
+    retry: Optional[object] = None
 
     def __post_init__(self):
         # normalize the sequence fields so policies compare by value
@@ -358,9 +363,32 @@ class FleetRun:
         stages are small and run inside :meth:`finish`)."""
         return self._solution is not None or self._curve_handle.done()
 
-    def finish(self) -> FleetSolution:
+    def _remaining(self, deadline: Optional[float]) -> Optional[float]:
+        if deadline is None:
+            return None
+        rem = deadline - time.monotonic()
+        if rem <= 0:
+            raise TimeoutError("fleet solve not served within the timeout")
+        return rem
+
+    def _materialize(self, handle, deadline: Optional[float], what: str = "result"):
+        """Blocks on one staged result, spending only the budget left on the
+        deadline clock for served futures (direct engine handles expose no
+        timeout — there the device computation is already in flight and the
+        caller used the blocking ``solve_fleet`` path anyway)."""
+        fn = getattr(handle, what)
+        if self._service is not None and deadline is not None:
+            return fn(timeout=self._remaining(deadline))
+        return fn()
+
+    def finish(self, timeout: Optional[float] = None) -> FleetSolution:
+        """Runs stages 3–5 and returns the (cached) :class:`FleetSolution`.
+        ``timeout`` is one deadline across ALL remaining staged solves;
+        served requests that outlive it raise :class:`TimeoutError` (the
+        run stays retryable — nothing is cached on a timed-out pass)."""
         if self._solution is not None:
             return self._solution
+        deadline = None if timeout is None else time.monotonic() + float(timeout)
         p, q, k = self.problem, self.quantum, self.num_clusters
         caps = self._caps
         Tp = int(p.T - p.lower.sum())  # round workload in 0-lower terms
@@ -368,7 +396,10 @@ class FleetRun:
         # stage 3: top-level (MC)²MKP over the cluster curves, sampled every
         # q units — batched with the bin-minimum LB instance (stage 4) into
         # ONE dispatch (same (k, T_q, M+1) envelope -> same pow2 bucket)
-        K = np.asarray(self._curve_handle.k_last(), dtype=np.float64)  # (k, curve)
+        K = np.asarray(
+            self._materialize(self._curve_handle, deadline, "k_last"),
+            dtype=np.float64,
+        )  # (k, curve)
         M0 = caps // q
         T_q = min(Tp // q, int(M0.sum()))
         # a cluster can never receive more than T_q quanta — clamping the
@@ -393,8 +424,12 @@ class FleetRun:
             Problem(T=T_q, lower=zeros, upper=M, cost_tables=tuple(binmin)),
         ]
         top_handle = self._dispatch(top, split=False)
-        m_alloc = np.asarray(top_handle.result())[0, :k].astype(np.int64)
-        row_lb = np.asarray(top_handle.k_last(), dtype=np.float64)[1]
+        m_alloc = np.asarray(self._materialize(top_handle, deadline))[0, :k].astype(
+            np.int64
+        )
+        row_lb = np.asarray(
+            self._materialize(top_handle, deadline, "k_last"), dtype=np.float64
+        )[1]
 
         # stage 4: the certificate. Any feasible exact allocation rounds
         # down < q units per cluster, so its bin total s lands in
@@ -435,7 +470,9 @@ class FleetRun:
             )
             for c, idx in enumerate(self.members)
         ]
-        X = np.asarray(self._dispatch(sched_probs, split=True).result())
+        X = np.asarray(
+            self._materialize(self._dispatch(sched_probs, split=True), deadline)
+        )
         x = np.zeros(p.n, dtype=np.int64)
         for c, idx in enumerate(self.members):
             x[idx] = X[c, : len(idx)]

@@ -33,6 +33,7 @@ import numpy as np
 
 from .marginal_jax import select_algorithm_batch
 from .problem import Problem, ProblemBatch, total_cost, validate_schedule
+from .resilience import retry_call
 from .scheduler import (
     _DP_ALGORITHMS,
     _schedule,
@@ -129,9 +130,16 @@ class Solver:
         batch solves and sweeps are submitted as served requests (coalescing
         with other same-bucket traffic) instead of direct engine dispatches.
         The service's engine supplies cache stats.
+      retry: a :class:`~repro.core.resilience.RetryPolicy`; when set, every
+        engine-facing dispatch is retried with exponential backoff on
+        TRANSIENT failures (``is_transient``) before the error propagates.
+        Non-transient errors always fail fast. ``None`` (default) = no
+        retries, bit-identical to the pre-resilience facade.
     """
 
-    def __init__(self, engine=None, backend: Optional[str] = None, service=None):
+    def __init__(
+        self, engine=None, backend: Optional[str] = None, service=None, retry=None
+    ):
         self.service = service
         if service is not None and engine is None:
             engine = service.engine
@@ -140,6 +148,15 @@ class Solver:
             raise ValueError(
                 "engine conflicts with service.engine; pass one or the other"
             )
+        self.retry = retry
+        self._retry_rng = None if retry is None else retry.make_rng()
+
+    def _guard(self, fn):
+        """Runs one dispatch closure under the retry policy (no-op when the
+        solver was built without one)."""
+        if self.retry is None:
+            return fn()
+        return retry_call(fn, self.retry, rng=self._retry_rng)
 
     # ---- solve ---------------------------------------------------------
 
@@ -191,18 +208,24 @@ class Solver:
         regimes = [p.regime() for p in plist]
         k_last = None
         if plist and algorithm == "auto" and self.service is not None:
-            fut = self.service.submit(plist, split_regimes=True)
-            X = np.asarray(fut.result())
+            X = np.asarray(
+                self._guard(
+                    lambda: self.service.submit(plist, split_regimes=True).result()
+                )
+            )
             schedules = [np.asarray(X[b, : p.n], np.int64) for b, p in enumerate(plist)]
             if check:
                 for p, x in zip(plist, schedules):
                     validate_schedule(p, x)
             algorithms = list(select_algorithm_batch(plist))
         elif plist and algorithm in _DP_ALGORITHMS and self.service is not None:
-            fut = self.service.submit(plist, split_regimes=False)
-            X = np.asarray(fut.result())
+
+            def _served_dp():
+                fut = self.service.submit(plist, split_regimes=False)
+                return np.asarray(fut.result()), np.asarray(fut.k_last())
+
+            X, k_last = self._guard(_served_dp)
             schedules = [np.asarray(X[b, : p.n], np.int64) for b, p in enumerate(plist)]
-            k_last = np.asarray(fut.k_last())
             if check:
                 for p, x in zip(plist, schedules):
                     validate_schedule(p, x)
@@ -211,17 +234,22 @@ class Solver:
             # direct dispatch (not .solve()) to keep the free k_last rows
             backend = "pallas" if algorithm == "dp_jax_pallas" else None
             engine = _resolve_engine(backend, None if backend else self.engine)
-            handle = engine.dispatch(plist, split_regimes=False)
-            X = handle.result()
+
+            def _direct_dp():
+                handle = engine.dispatch(plist, split_regimes=False)
+                return handle.result(), handle.k_last()
+
+            X, k_last = self._guard(_direct_dp)
             schedules = [np.asarray(X[b, : p.n], np.int64) for b, p in enumerate(plist)]
-            k_last = handle.k_last()
             if check:
                 for p, x in zip(plist, schedules):
                     validate_schedule(p, x)
             algorithms = ["dp_batch"] * len(plist)
         else:
-            schedules = _schedule_batch(
-                plist, algorithm, check, backend=None, engine=self.engine
+            schedules = self._guard(
+                lambda: _schedule_batch(
+                    plist, algorithm, check, backend=None, engine=self.engine
+                )
             )
             algorithms = (
                 list(select_algorithm_batch(plist))
@@ -256,11 +284,19 @@ class Solver:
             except ValueError as e:
                 raise ValueError(f"sweep point {d}: {e}") from e
         if self.service is not None:
-            fut = self.service.submit(tight, split_regimes=False)
-            X, k_last = np.asarray(fut.result()), np.asarray(fut.k_last())
+
+            def _served_sweep():
+                fut = self.service.submit(tight, split_regimes=False)
+                return np.asarray(fut.result()), np.asarray(fut.k_last())
+
+            X, k_last = self._guard(_served_sweep)
         else:
-            handle = self.engine.dispatch(tight, split_regimes=False)
-            X, k_last = handle.result(), handle.k_last()
+
+            def _direct_sweep():
+                handle = self.engine.dispatch(tight, split_regimes=False)
+                return handle.result(), handle.k_last()
+
+            X, k_last = self._guard(_direct_sweep)
         schedules = [np.asarray(X[b, : p.n], np.int64) for b, p in enumerate(tight)]
         if check:
             for p, x in zip(tight, schedules):

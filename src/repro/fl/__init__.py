@@ -1,5 +1,14 @@
 from .client import local_train, make_client_fn
 from .energy import DeviceProfile, EnergyEstimator, make_fleet
+from .faults import (
+    ClientFault,
+    FaultInjector,
+    FaultPlan,
+    FlakyEngine,
+    RoundFaults,
+    proportional_greedy,
+    residual_problem,
+)
 from .pipeline import (
     AsyncCampaignRunner,
     CampaignHistory,
@@ -8,12 +17,15 @@ from .pipeline import (
     PlanFuture,
     SerialPlanExecutor,
     ThreadPlanExecutor,
+    load_campaign_checkpoint,
+    save_campaign_checkpoint,
 )
 from .rounds import run_campaign
 from .server import (
     FederatedServer,
     FLRoundResult,
     PlanPolicy,
+    RecoveryInfo,
     RoundPlan,
     ScenarioReport,
     apply_dropout,
@@ -25,4 +37,7 @@ __all__ = [
     "ScenarioReport", "apply_dropout", "CampaignHistory", "run_campaign",
     "AsyncCampaignRunner", "CampaignRunner", "PipelineStats", "PlanFuture",
     "SerialPlanExecutor", "ThreadPlanExecutor",
+    "ClientFault", "FaultInjector", "FaultPlan", "FlakyEngine", "RoundFaults",
+    "RecoveryInfo", "proportional_greedy", "residual_problem",
+    "load_campaign_checkpoint", "save_campaign_checkpoint",
 ]

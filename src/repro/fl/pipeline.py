@@ -73,8 +73,18 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from ..checkpoint import latest_checkpoint, load_checkpoint_arrays, save_checkpoint
+from ..core.problem import Problem, total_cost
+from ..core.resilience import is_transient
 from ..data.pipeline import lm_round_batches
-from .server import FederatedServer, FLRoundResult
+from .faults import FaultInjector, FaultPlan, proportional_greedy, residual_problem
+from .server import (
+    FederatedServer,
+    FLRoundResult,
+    RecoveryInfo,
+    RoundPlan,
+    ScenarioReport,
+)
 
 __all__ = [
     "AsyncCampaignRunner",
@@ -84,6 +94,8 @@ __all__ = [
     "PlanFuture",
     "SerialPlanExecutor",
     "ThreadPlanExecutor",
+    "load_campaign_checkpoint",
+    "save_campaign_checkpoint",
 ]
 
 
@@ -190,6 +202,188 @@ _EXECUTORS = {"serial": SerialPlanExecutor, "pipelined": ThreadPlanExecutor}
 
 
 # ---------------------------------------------------------------------------
+# round-granular campaign checkpointing (DESIGN.md §17)
+#
+# A checkpoint is the complete round-r restart state: params, estimator
+# tables, the rng bit-generator state, and every completed FLRoundResult
+# (recovery provenance included). Arrays ride the npz tree; scalars and
+# labels ride the json manifest's ``extra``. Restoring and continuing is
+# bit-identical to never having stopped: the rng stream resumes mid-sequence
+# and planning is a pure function of the restored estimator snapshot.
+# ---------------------------------------------------------------------------
+
+
+def _problem_to_tree(p: Problem) -> dict:
+    tree = {"T": np.int64(p.T), "lower": np.asarray(p.lower), "upper": np.asarray(p.upper)}
+    for i, tbl in enumerate(p.cost_tables):
+        tree[f"tbl{i:04d}"] = np.asarray(tbl)
+    return tree
+
+
+def _problem_from_arrays(get) -> Problem:
+    lower = np.asarray(get("lower"), dtype=np.int64)
+    tables = tuple(np.asarray(get(f"tbl{i:04d}"), np.float64) for i in range(len(lower)))
+    return Problem(
+        T=int(get("T")), lower=lower, upper=np.asarray(get("upper"), np.int64),
+        cost_tables=tables,
+    )
+
+
+def _round_to_tree_meta(res: FLRoundResult):
+    tree = {"assignments": np.asarray(res.assignments, dtype=np.int64)}
+    meta = {
+        "round_index": int(res.round_index),
+        "mean_loss": float(res.mean_loss),
+        "energy_joules": float(res.energy_joules),
+        "estimated_joules": float(res.estimated_joules),
+        "makespan_joules": float(res.makespan_joules),
+        "scen_labels": None,
+        "recovery": None,
+    }
+    if res.scenarios is not None:
+        meta["scen_labels"] = [str(lbl) for lbl in res.scenarios.labels]
+        tree["scen_x"] = np.asarray(res.scenarios.assignments)
+        tree["scen_e"] = np.asarray(res.scenarios.energies)
+    if res.recovery is not None:
+        ri = res.recovery
+        meta["recovery"] = {
+            "failed_clients": [int(i) for i in ri.failed_clients],
+            "straggler_clients": [int(i) for i in ri.straggler_clients],
+            "residual_T": int(ri.residual_T),
+            "shortfall": int(ri.shortfall),
+            "attempts": int(ri.attempts),
+            "fallback": bool(ri.fallback),
+            "est_cost_original": float(ri.est_cost_original),
+            "est_overhead_J": float(ri.est_overhead_J),
+            "has_residual_problem": ri.residual_problem is not None,
+            "has_problem": ri.problem is not None,
+        }
+        tree["rec_completed"] = np.asarray(ri.completed, dtype=np.int64)
+        tree["rec_x0"] = np.asarray(ri.assignments_original, dtype=np.int64)
+        tree["rec_y"] = np.asarray(ri.recovery_assignments, dtype=np.int64)
+        if ri.residual_problem is not None:
+            tree["rec_q"] = _problem_to_tree(ri.residual_problem)
+        if ri.problem is not None:
+            tree["rec_p"] = _problem_to_tree(ri.problem)
+    return tree, meta
+
+
+def _round_from_arrays(data: dict, prefix: str, meta: dict) -> FLRoundResult:
+    scenarios = None
+    if meta["scen_labels"] is not None:
+        scenarios = ScenarioReport(
+            labels=list(meta["scen_labels"]),
+            assignments=np.asarray(data[f"{prefix}/scen_x"]),
+            energies=np.asarray(data[f"{prefix}/scen_e"]),
+        )
+    recovery = None
+    rm = meta["recovery"]
+    if rm is not None:
+        recovery = RecoveryInfo(
+            failed_clients=tuple(rm["failed_clients"]),
+            straggler_clients=tuple(rm["straggler_clients"]),
+            completed=np.asarray(data[f"{prefix}/rec_completed"], np.int64),
+            residual_T=int(rm["residual_T"]),
+            shortfall=int(rm["shortfall"]),
+            attempts=int(rm["attempts"]),
+            fallback=bool(rm["fallback"]),
+            assignments_original=np.asarray(data[f"{prefix}/rec_x0"], np.int64),
+            recovery_assignments=np.asarray(data[f"{prefix}/rec_y"], np.int64),
+            residual_problem=(
+                _problem_from_arrays(lambda k: data[f"{prefix}/rec_q/{k}"])
+                if rm["has_residual_problem"]
+                else None
+            ),
+            problem=(
+                _problem_from_arrays(lambda k: data[f"{prefix}/rec_p/{k}"])
+                if rm["has_problem"]
+                else None
+            ),
+            est_cost_original=float(rm["est_cost_original"]),
+            est_overhead_J=float(rm["est_overhead_J"]),
+        )
+    return FLRoundResult(
+        round_index=int(meta["round_index"]),
+        assignments=np.asarray(data[f"{prefix}/assignments"], np.int64),
+        mean_loss=float(meta["mean_loss"]),
+        energy_joules=float(meta["energy_joules"]),
+        estimated_joules=float(meta["estimated_joules"]),
+        makespan_joules=float(meta["makespan_joules"]),
+        scenarios=scenarios,
+        recovery=recovery,
+    )
+
+
+def save_campaign_checkpoint(
+    directory: str,
+    step: int,
+    server: FederatedServer,
+    rng: np.random.Generator,
+    results,
+) -> str:
+    """Persists the round-``step`` restart state (params + estimator tables
+    + rng state + completed results) via :func:`repro.checkpoint.
+    save_checkpoint`. ``step`` is the 0-indexed last COMPLETED round."""
+    rounds_tree, rounds_meta = {}, []
+    for res in results:
+        tree_r, meta_r = _round_to_tree_meta(res)
+        rounds_tree[f"r{int(res.round_index):06d}"] = tree_r
+        rounds_meta.append(meta_r)
+    tree = {
+        "params": server.params,
+        "est": {
+            f"{i:04d}": np.asarray(t)
+            for i, t in enumerate(server.estimator._tables)
+            if t is not None
+        },
+        "rounds": rounds_tree,
+    }
+    extra = {
+        "round": int(step),
+        "rng_state": rng.bit_generator.state,
+        "rounds": rounds_meta,
+    }
+    return save_checkpoint(directory, int(step), tree, extra)
+
+
+def load_campaign_checkpoint(
+    directory: str, server: FederatedServer, rng: np.random.Generator
+):
+    """Restores the latest campaign checkpoint IN PLACE (params, estimator
+    tables, rng state) and returns ``(last_completed_round, results)`` —
+    or None when the directory holds no checkpoint. The continuation is
+    bit-identical to the uninterrupted campaign (tests/test_faults.py)."""
+    import jax
+
+    from ..checkpoint.checkpoint import _path_str
+
+    step = latest_checkpoint(directory)
+    if step is None:
+        return None
+    data, manifest = load_checkpoint_arrays(directory, int(step))
+    extra = manifest["extra"]
+    leaves_with_paths, _ = jax.tree_util.tree_flatten_with_path(server.params)
+    new_leaves = []
+    for path, leaf in leaves_with_paths:
+        arr = data["params/" + _path_str(path)]
+        like = np.asarray(leaf)
+        new_leaves.append(arr.astype(like.dtype).reshape(like.shape))
+    server.params = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(server.params), new_leaves
+    )
+    for i in range(len(server.estimator._tables)):
+        key = f"est/{i:04d}"
+        if key in data:
+            server.estimator._tables[i] = np.asarray(data[key], dtype=np.float64)
+    rng.bit_generator.state = extra["rng_state"]
+    results = [
+        _round_from_arrays(data, f"rounds/r{int(m['round_index']):06d}", m)
+        for m in extra["rounds"]
+    ]
+    return int(extra["round"]), results
+
+
+# ---------------------------------------------------------------------------
 # campaign history + pipeline stats
 # ---------------------------------------------------------------------------
 
@@ -263,6 +457,16 @@ class CampaignHistory:
         if self.pipeline_stats is not None:
             out["pipeline_mode"] = self.pipeline_stats.mode
             out["planner_overlap_fraction"] = self.pipeline_stats.overlap_fraction
+        # recovery telemetry (DESIGN.md §17) — keyed only when some round
+        # actually recovered, so zero-fault summaries are unchanged
+        recovered = [r.recovery for r in self.rounds if r.recovery is not None]
+        if recovered:
+            out["recovered_rounds"] = len(recovered)
+            out["recovery_fallbacks"] = sum(1 for ri in recovered if ri.fallback)
+            out["recovery_overhead_J"] = float(
+                sum(ri.est_overhead_J for ri in recovered)
+            )
+            out["recovery_shortfall"] = int(sum(ri.shortfall for ri in recovered))
         return out
 
 
@@ -295,33 +499,106 @@ class CampaignRunner:
         rng: np.random.Generator,
         max_steps: Optional[int] = None,
         on_round: Optional[Callable[[FLRoundResult], None]] = None,
+        faults: Optional[object] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 1,
     ) -> CampaignHistory:
+        """Runs the campaign. Beyond the classic knobs (DESIGN.md §11):
+
+        ``faults``: a :class:`~repro.fl.faults.FaultPlan` or
+        :class:`~repro.fl.faults.FaultInjector` — client crashes/stragglers
+        fire after each round's plan lands and are recovered via
+        :meth:`~repro.fl.server.FederatedServer.recover_round` on the MAIN
+        thread (recovery mutates nothing, but running it in round order
+        keeps the serial/pipelined bit-identity contract auditable);
+        transient planner/scenario failures retry inline; overload bursts
+        submit extra one-off requests to ``server.service``. ``faults=None``
+        leaves every code path bit-identical to the pre-fault-layer loop.
+
+        ``checkpoint_dir``: round-granular checkpoint/resume (DESIGN.md
+        §17) — the restart state is saved every ``checkpoint_every``
+        completed rounds (and on the final round), and a non-empty directory
+        resumes from its latest checkpoint, reproducing the uninterrupted
+        campaign's params and history exactly.
+        """
         server = self.server
         server.round_T = round_T
         if max_steps is None:
             max_steps = max(d.max_batches for d in server.estimator.fleet)
+        injector = FaultInjector(faults) if isinstance(faults, FaultPlan) else faults
         stats = PipelineStats(mode=self.mode)
         executor = _EXECUTORS[self.mode]()
         futures: List[PlanFuture] = []
+        burst_futures: list = []
 
         def submit(label, fn, *args):
             f = executor.submit(label, fn, *args)
             futures.append(f)
             return f
 
-        before = server.engine.cache_stats()
+        def materialize_plan(plan_f, r):
+            # transient planner failures (an injected engine fault caught
+            # mid-solve) re-plan inline from the same estimator snapshot —
+            # nothing mutated it since submit, so the retry is bit-identical
+            try:
+                return plan_f.result()
+            except Exception as e:
+                if injector is None or not is_transient(e):
+                    raise
+                return self._replan(r, round_T)
+
+        def materialize_scenarios(scen_f, problems, labels):
+            try:
+                return scen_f.result()
+            except Exception as e:
+                if injector is None or not is_transient(e):
+                    raise
+            try:
+                return server.solve_scenarios(problems, labels)
+            except Exception as e:
+                if not is_transient(e):
+                    raise
+                return None  # persistently failing what-ifs degrade to None
+
+        start_round = 0
         results: List[FLRoundResult] = []
+        if checkpoint_dir is not None:
+            restored = load_campaign_checkpoint(checkpoint_dir, server, rng)
+            if restored is not None:
+                start_round, results = restored[0] + 1, list(restored[1])
+        before = server.engine.cache_stats()
         try:
-            if num_rounds > 0:
-                # Round 0's plan has nothing to hide behind — submitted
+            if start_round < num_rounds:
+                # The first plan has nothing to hide behind — submitted
                 # eagerly so the pipelined path still has one entry point.
                 plan_f = submit(
-                    "plan[0]", server.plan_round, 0, round_T, server.build_problem(round_T)
+                    f"plan[{start_round}]",
+                    server.plan_round,
+                    start_round,
+                    round_T,
+                    server.build_problem(round_T),
                 )
-            for r in range(num_rounds):
+            for r in range(start_round, num_rounds):
                 t_round = time.perf_counter()
+                if injector is not None and server.service is not None:
+                    for b in range(injector.burst(r)):
+                        # chaos traffic: extra one-off requests against the
+                        # shared service; overload shedding is the expected
+                        # outcome, not a campaign failure
+                        try:
+                            burst_futures.append(
+                                server.service.submit(
+                                    injector.burst_problem(r, b), timeout=0.1
+                                )
+                            )
+                        except Exception:
+                            pass
                 batches = lm_round_batches(examples_per_client, max_steps, batch_size, r)
-                plan = plan_f.result()
+                plan = materialize_plan(plan_f, r)
+                if injector is not None:
+                    round_faults = injector.round_faults(r, plan.assignments)
+                    if round_faults is not None:
+                        plan = server.recover_round(plan, round_faults)
                 mean_loss = server.train_round(plan, batches)  # async dispatch
                 # CPU-side accounting runs while the device trains; it is
                 # the only stage touching rng/estimator state (see server).
@@ -350,12 +627,24 @@ class CampaignRunner:
                     energy_joules=acct["energy_joules"],
                     estimated_joules=plan.est_cost,
                     makespan_joules=acct["makespan_joules"],
-                    scenarios=scen_f.result(),
+                    scenarios=materialize_scenarios(scen_f, scen_problems, scen_labels),
+                    recovery=plan.recovery,
                 )
                 results.append(res)
+                if checkpoint_dir is not None and (
+                    (r + 1) % max(1, int(checkpoint_every)) == 0 or r == num_rounds - 1
+                ):
+                    save_campaign_checkpoint(checkpoint_dir, r, server, rng, results)
                 stats.round_wall_s.append(time.perf_counter() - t_round)
                 if on_round:
                     on_round(res)
+            for f in burst_futures:
+                # drain injected chaos traffic so close()/stats see a clean
+                # service; burst failures are chaos noise, not campaign state
+                try:
+                    f.result(timeout=60)
+                except Exception:
+                    pass
         finally:
             executor.shutdown()
         after = server.engine.cache_stats()
@@ -373,6 +662,29 @@ class CampaignRunner:
             rounds=results,
             dp_cache_stats=delta,
             pipeline_stats=stats,
+        )
+
+    def _replan(self, r: int, T: int, max_attempts: int = 3) -> RoundPlan:
+        """Inline re-plan after a transient planner failure: bounded retries
+        of the normal planning stage, then a guaranteed-feasible greedy plan
+        (lower limits honored via the residual construction) when the solver
+        stays down — the campaign always gets a valid round plan."""
+        server = self.server
+        for _ in range(max_attempts):
+            try:
+                return server.plan_round(r, T, server.build_problem(T))
+            except Exception as e:
+                if not is_transient(e):
+                    raise
+        problem = server.build_problem(T)
+        res = residual_problem(problem, problem.lower, ())
+        x = np.asarray(problem.lower, dtype=np.int64) + proportional_greedy(res)
+        return RoundPlan(
+            round_index=int(r),
+            T=int(T),
+            assignments=x,
+            est_cost=float(total_cost(problem, x)),
+            problem=problem,
         )
 
 

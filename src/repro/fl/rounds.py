@@ -29,6 +29,9 @@ def run_campaign(
     max_steps: Optional[int] = None,
     on_round: Optional[Callable[[FLRoundResult], None]] = None,
     pipelined: bool = False,
+    faults=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
 ) -> CampaignHistory:
     """Runs ``num_rounds`` FedAvg rounds with ``round_T`` total mini-batches
     scheduled across clients each round.
@@ -48,6 +51,12 @@ def run_campaign(
     so concurrent solver traffic (including from an ``on_round`` callback)
     lands in the delta too. Pass ``FederatedServer(engine=SweepEngine())``
     when the accounting must isolate this campaign.
+
+    ``faults`` (a :class:`~repro.fl.faults.FaultPlan` or
+    :class:`~repro.fl.faults.FaultInjector`) arms the deterministic
+    fault-injection layer; ``checkpoint_dir``/``checkpoint_every`` arm
+    round-granular checkpoint/resume — both fully inert when unset
+    (DESIGN.md §17).
     """
     runner = CampaignRunner(server, mode="pipelined" if pipelined else "serial")
     return runner.run(
@@ -58,4 +67,7 @@ def run_campaign(
         rng,
         max_steps=max_steps,
         on_round=on_round,
+        faults=faults,
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every,
     )

@@ -44,15 +44,18 @@ from ..core._deprecation import warn_deprecated
 from ..core.fleet import PlanPolicy
 from ..core.pareto import deadline_grid
 from ..core.problem import Problem, total_cost
+from ..core.resilience import is_transient
 from ..core.solver import Solver
 from ..core.sweep import default_engine
 from ..optim.optimizers import Optimizer
 from .client import make_client_fn
 from .energy import EnergyEstimator
+from .faults import RoundFaults, proportional_greedy, residual_problem
 
 __all__ = [
     "FLRoundResult",
     "PlanPolicy",
+    "RecoveryInfo",
     "RoundPlan",
     "ScenarioReport",
     "FederatedServer",
@@ -60,6 +63,30 @@ __all__ = [
 ]
 
 _UNSET = object()  # sentinel: distinguishes "legacy kwarg passed" from default
+
+
+@dataclasses.dataclass
+class RecoveryInfo:
+    """Provenance of a mid-round recovery (DESIGN.md §17): what failed, what
+    each client had banked when it did, the exact residual instance the
+    survivors were re-planned over, and what the detour cost on the
+    planning-time tables. Carried on the recovered :class:`RoundPlan` and
+    the round's :class:`FLRoundResult`, so chaos tests (and checkpoints) can
+    replay the recovery solve independently."""
+
+    failed_clients: tuple  # crashed mid-round; take no recovery work
+    straggler_clients: tuple  # too slow to finish; take no recovery work
+    completed: np.ndarray  # (n,) batches banked before recovery kicked in
+    residual_T: int  # workload re-planned onto the survivors
+    shortfall: int  # residual units the surviving capacity could NOT absorb
+    attempts: int  # solver attempts consumed (1 = first try succeeded)
+    fallback: bool  # proportional-greedy fallback engaged
+    assignments_original: np.ndarray  # the pre-fault plan
+    recovery_assignments: np.ndarray  # extra batches per survivor (the y)
+    residual_problem: Optional[Problem]  # the exact re-planned instance
+    problem: Optional[Problem]  # the planning-time snapshot it derives from
+    est_cost_original: float  # pre-fault estimated Joules
+    est_overhead_J: float  # est(recovered round) - est(pre-fault plan)
 
 
 @dataclasses.dataclass
@@ -75,6 +102,11 @@ class RoundPlan:
     # the chosen frontier point was solved under, and its achieved makespan.
     deadline: Optional[float] = None
     est_time: Optional[float] = None
+    # the immutable estimator snapshot this plan was solved against — what
+    # mid-round recovery re-plans over, so the residual instance is exact
+    # even if the estimator drifted since (DESIGN.md §17)
+    problem: Optional[Problem] = None
+    recovery: Optional[RecoveryInfo] = None
 
 
 @dataclasses.dataclass
@@ -96,6 +128,7 @@ class FLRoundResult:
     estimated_joules: float  # what the scheduler thought it would cost
     makespan_joules: float  # max per-device energy (OLAR's objective, for contrast)
     scenarios: Optional[ScenarioReport] = None  # what-if planning, if enabled
+    recovery: Optional[RecoveryInfo] = None  # mid-round recovery, if it fired
 
 
 def apply_dropout(problem: Problem, dropped) -> Problem:
@@ -219,7 +252,9 @@ class FederatedServer:
             np.asarray(t, dtype=np.float64) for t in policy.time_tables
         ]
         self.frontier_points = int(policy.frontier_points)
-        self.solver = Solver(engine=self.engine, service=self.service)
+        self.solver = Solver(
+            engine=self.engine, service=self.service, retry=policy.retry
+        )
         self.scenario_T_candidates = list(policy.scenario_T_candidates)
         self.scenario_dropouts = [tuple(s) for s in policy.scenario_dropouts]
         self.n_clients = len(estimator.fleet)
@@ -285,6 +320,7 @@ class FederatedServer:
                 T=int(T),
                 assignments=np.asarray(fsol.schedule),
                 est_cost=float(fsol.objective),
+                problem=est_problem,
             )
         if self.frontier_mode is not None:
             grid = deadline_grid(est_problem, self.time_tables, self.frontier_points)
@@ -297,6 +333,7 @@ class FederatedServer:
                 est_cost=float(pt.energy),
                 deadline=float(pt.deadline),
                 est_time=float(pt.time),
+                problem=est_problem,
             )
         sol = self.solver.solve(est_problem, algorithm=self.algorithm)
         return RoundPlan(
@@ -304,6 +341,73 @@ class FederatedServer:
             T=int(T),
             assignments=np.asarray(sol.schedule),
             est_cost=float(sol.objective),
+            problem=est_problem,
+        )
+
+    def recover_round(
+        self, plan: RoundPlan, faults: RoundFaults, max_attempts: int = 3
+    ) -> RoundPlan:
+        """Mid-round recovery (DESIGN.md §17): given round telemetry saying
+        which clients crashed or straggled and how many batches each actually
+        banked, re-plan the residual workload onto the survivors with ONE
+        batched solve through the :class:`~repro.core.solver.Solver` facade.
+
+        The residual instance is exact under the paper's atomic-task model —
+        survivor ``i``'s marginal table is ``C_i(c_i + j) - C_i(c_i)`` — so
+        the recovered assignment is bit-identical to a fault-free re-plan of
+        the surviving cohort (asserted in tests/test_faults.py). Transient
+        solver failures retry up to ``max_attempts``; if the solver itself is
+        the failing component, the guaranteed-feasible
+        :func:`~repro.fl.faults.proportional_greedy` fallback engages. The
+        returned plan carries full :class:`RecoveryInfo` provenance; its
+        ``est_cost`` is re-stated for the recovered assignment on the same
+        planning-time tables, so the recovery overhead is directly readable
+        as ``est_cost - recovery.est_cost_original``.
+        """
+        problem = plan.problem
+        if problem is None:
+            problem = self.build_problem(plan.T)
+        x = np.asarray(plan.assignments, dtype=np.int64)
+        completed = np.minimum(np.asarray(faults.completed, dtype=np.int64), x)
+        res_problem = residual_problem(problem, completed, faults.lost_clients)
+        residual = int(x.sum()) - int(completed.sum())
+        if residual <= 0:
+            return plan
+        attempts, fallback, y = 0, False, None
+        while attempts < max_attempts:
+            attempts += 1
+            try:
+                # one batched facade solve — same substrate (engine or
+                # service) as round planning, so recovery coalesces with any
+                # other traffic exactly like a plan does
+                sol = self.solver.solve([res_problem], check=True)
+                y = np.asarray(sol.schedules[0], dtype=np.int64)
+                break
+            except Exception as e:
+                if not is_transient(e):
+                    break  # solver is the failing component: fall back now
+        if y is None:
+            y = proportional_greedy(res_problem)
+            fallback = True
+        effective = completed + y
+        est_cost = float(total_cost(problem, effective))
+        info = RecoveryInfo(
+            failed_clients=tuple(faults.crashed),
+            straggler_clients=tuple(faults.stragglers),
+            completed=completed,
+            residual_T=int(res_problem.T),
+            shortfall=residual - int(res_problem.T),
+            attempts=attempts,
+            fallback=fallback,
+            assignments_original=x,
+            recovery_assignments=y,
+            residual_problem=res_problem,
+            problem=problem,
+            est_cost_original=float(plan.est_cost),
+            est_overhead_J=est_cost - float(plan.est_cost),
+        )
+        return dataclasses.replace(
+            plan, assignments=effective, est_cost=est_cost, recovery=info
         )
 
     def train_round(self, plan: RoundPlan, batches) -> jnp.ndarray:

@@ -44,7 +44,9 @@ from typing import Optional
 import numpy as np
 
 from ..core.pareto import assemble_frontier, candidate_deadlines, tightened_instances
-from ..core.problem import Problem, ProblemBatch
+from ..core.problem import Problem, ProblemBatch, total_cost
+from ..core.resilience import CircuitBreaker, RetryPolicy, is_transient
+from ..core.scheduler import _schedule
 from ..core.sweep import SweepEngine, _next_pow2, default_engine
 from .coalesce import coalesce_key, combine_batches, pow2_ladder, warm_batch
 
@@ -189,9 +191,42 @@ class FleetFuture:
         return self._run.done()
 
     def result(self, timeout: Optional[float] = None):
-        # timeout is accepted for API symmetry; the underlying staged
-        # requests block on the service's own flush cadence
-        return self._run.finish()
+        """The :class:`~repro.core.fleet.FleetSolution`; ``timeout`` is a
+        real deadline enforced across ALL remaining staged solves (each
+        staged served request gets the budget left on the clock), raising
+        :class:`TimeoutError` exactly like :meth:`ScheduleFuture.result`.
+        A timed-out call may be retried — later stages re-run from the
+        memoized stage-1 curves, and a completed solve is cached."""
+        return self._run.finish(timeout=timeout)
+
+
+class _DegradedHandle:
+    """Stand-in flush handle for the circuit breaker's degraded direct-solve
+    path (DESIGN.md §17): schedules were host-solved — bit-identical to the
+    engine path — so ``result()``/``objectives()`` demux normally; only
+    ``k_last()`` is unavailable (no fused-DP dispatch ran), and raises with
+    the same flavor of error as a regime-split handle."""
+
+    def __init__(self, X: np.ndarray, objectives: np.ndarray):
+        self._X = X
+        self._obj = objectives
+
+    def done(self) -> bool:
+        return True
+
+    def result(self) -> np.ndarray:
+        return self._X
+
+    def objectives(self) -> np.ndarray:
+        return self._obj
+
+    def k_last(self) -> np.ndarray:
+        raise ValueError(
+            "k_last() is unavailable: this flush was served by the degraded "
+            "direct-solve path (circuit breaker open) — no fused-DP row "
+            "exists. Retry once the breaker closes, or solve directly "
+            "against a healthy engine."
+        )
 
 
 class _Request:
@@ -220,6 +255,17 @@ class SchedulerService:
         :class:`ServiceOverloaded`. An oversize request (> ``max_pending``
         rows) is admitted only once the service is drained, alone.
       name: thread-name prefix (observability).
+      retry: a :class:`~repro.core.resilience.RetryPolicy` — flushes whose
+        engine dispatch/materialization raises a TRANSIENT error
+        (:func:`~repro.core.resilience.is_transient`) are re-dispatched with
+        exponential backoff + deterministic jitter. Non-transient errors
+        always propagate to the affected futures unchanged.
+      breaker: a :class:`~repro.core.resilience.CircuitBreaker` — after K
+        consecutive engine failures the breaker opens and flushes are served
+        by the DEGRADED direct-solve path (host algorithms, bit-identical
+        schedules, no ``k_last``) instead of hammering the engine, until a
+        half-open probe succeeds. With a breaker configured, transient
+        failures that exhaust their retries also degrade rather than fail.
     """
 
     def __init__(
@@ -229,6 +275,8 @@ class SchedulerService:
         max_delay_s: float = 0.002,
         max_pending: int = 1024,
         name: str = "sched-serve",
+        retry: Optional[RetryPolicy] = None,
+        breaker: Optional[CircuitBreaker] = None,
     ):
         if max_batch < 1 or max_pending < 1:
             raise ValueError("max_batch and max_pending must be >= 1")
@@ -236,6 +284,9 @@ class SchedulerService:
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_s)
         self.max_pending = int(max_pending)
+        self.retry = retry
+        self.breaker = breaker
+        self._retry_rng = retry.make_rng() if retry is not None else None
         self._cond = threading.Condition()
         self._pending: dict = {}  # coalesce key -> [_Request]
         self._pending_rows = 0  # admitted, not yet flushed
@@ -252,6 +303,10 @@ class SchedulerService:
             "close_flushes": 0,
             "rejected": 0,
             "warmed_executables": 0,
+            "retries": 0,
+            "flush_failures": 0,
+            "degraded_flushes": 0,
+            "degraded_rows": 0,
         }
         self._done_q: queue.SimpleQueue = queue.SimpleQueue()
         self._coalescer = threading.Thread(
@@ -445,6 +500,8 @@ class SchedulerService:
             out["mean_flush_rows"] = (
                 out["flushed_rows"] / out["flushes"] if out["flushes"] else 0.0
             )
+        if self.breaker is not None:
+            out["breaker"] = self.breaker.stats()
         return out
 
     def close(self, timeout: Optional[float] = None) -> None:
@@ -526,18 +583,24 @@ class SchedulerService:
 
     def _flush(self, key, reqs) -> None:
         """ONE engine dispatch for a ripe bucket (async — the executable is
-        launched, not materialized), handed to the completer."""
+        launched, not materialized), handed to the completer. Failure
+        handling (retry / breaker / degraded solve) runs on the completer
+        thread so the coalescer's flush cadence never blocks on backoff."""
         split = key[3]
         combined, slices = combine_batches([r.batch for r in reqs])
+        if self.breaker is not None and not self.breaker.allow():
+            # breaker open: route straight to the degraded direct-solve path
+            self._done_q.put(("degraded", None, reqs, slices, combined, split))
+            return
         try:
             handle = self.engine.dispatch(combined, split_regimes=split)
         except BaseException as e:
-            self._abort(reqs, e)
+            self._done_q.put(("failed", e, reqs, slices, combined, split))
             return
         with self._cond:
             self._stats["flushes"] += 1
             self._stats["flushed_rows"] += combined.B
-        self._done_q.put((handle, reqs, slices))
+        self._done_q.put(("ok", handle, reqs, slices, combined, split))
 
     # ---- completer thread ----------------------------------------------
 
@@ -546,17 +609,96 @@ class SchedulerService:
             item = self._done_q.get()
             if item is None:
                 return
-            handle, reqs, slices = item
-            try:
-                X = handle.result()  # blocks until the device solve lands
-            except BaseException as e:
-                self._abort(reqs, e)
-                continue
-            t_done = time.monotonic()
-            for r, (lo, hi) in zip(reqs, slices):
-                # each request sees only ITS rows, trimmed to its own n
-                r.future._resolve(X[lo:hi, : r.batch.n].copy(), handle, lo, hi, t_done)
-            self._retire(reqs)
+            kind, payload, reqs, slices, combined, split = item
+            if kind == "ok":
+                try:
+                    X = payload.result()  # blocks until the device solve lands
+                except BaseException as e:
+                    self._recover_flush(reqs, slices, combined, split, e)
+                    continue
+                if self.breaker is not None:
+                    self.breaker.record_success()
+                self._land(reqs, slices, payload, X)
+            elif kind == "failed":
+                self._recover_flush(reqs, slices, combined, split, payload)
+            else:  # "degraded": breaker was open at flush time
+                self._serve_degraded(reqs, slices, combined, split)
+
+    def _recover_flush(self, reqs, slices, combined, split, exc) -> None:
+        """A flush's engine attempt failed (at dispatch or materialization):
+        retry transient errors under the policy, feed the breaker, and — with
+        a breaker configured — serve exhausted-transient flushes from the
+        degraded path instead of failing them. Non-transient errors always
+        propagate to the futures unchanged (real bugs are not retried)."""
+        with self._cond:
+            self._stats["flush_failures"] += 1
+        if self.breaker is not None:
+            self.breaker.record_failure()
+        if is_transient(exc) and self.retry is not None:
+            attempt = 1
+            while attempt < self.retry.max_attempts:
+                if self.breaker is not None and not self.breaker.allow():
+                    break  # opened mid-retry: stop hammering, degrade below
+                time.sleep(self.retry.delay(attempt, self._retry_rng))
+                attempt += 1
+                with self._cond:
+                    self._stats["retries"] += 1
+                try:
+                    handle = self.engine.dispatch(combined, split_regimes=split)
+                    X = handle.result()
+                except BaseException as e:
+                    exc = e
+                    with self._cond:
+                        self._stats["flush_failures"] += 1
+                    if self.breaker is not None:
+                        self.breaker.record_failure()
+                    if not is_transient(exc):
+                        break
+                    continue
+                if self.breaker is not None:
+                    self.breaker.record_success()
+                with self._cond:
+                    self._stats["flushes"] += 1
+                    self._stats["flushed_rows"] += combined.B
+                self._land(reqs, slices, handle, X)
+                return
+        if is_transient(exc) and self.breaker is not None:
+            self._serve_degraded(reqs, slices, combined, split)
+        else:
+            self._abort(reqs, exc)
+
+    def _serve_degraded(self, reqs, slices, combined, split) -> None:
+        """The circuit breaker's fallback: solve every instance of the flush
+        with the host algorithms (``auto`` regime dispatch for split flushes,
+        the reference DP otherwise) — engine-free, slower, but bit-identical
+        schedules (asserted in tests/test_service_resilience.py), so callers
+        cannot tell a degraded flush from a served one except by latency and
+        the absence of ``k_last``."""
+        try:
+            X = np.zeros((combined.B, combined.n), dtype=np.int64)
+            obj = np.zeros(combined.B, dtype=np.float64)
+            for b in range(combined.B):
+                p = combined.instance(b)
+                x, _ = _schedule(p, "auto" if split else "dp", check=False)
+                X[b, : p.n] = x
+                fixed = float(
+                    sum(p.cost_tables[i][int(p.lower[i])] for i in range(p.n))
+                )
+                obj[b] = total_cost(p, x) - fixed  # 0-lower-limit convention
+        except BaseException as e:
+            self._abort(reqs, e)
+            return
+        with self._cond:
+            self._stats["degraded_flushes"] += 1
+            self._stats["degraded_rows"] += combined.B
+        self._land(reqs, slices, _DegradedHandle(X, obj), X)
+
+    def _land(self, reqs, slices, handle, X) -> None:
+        t_done = time.monotonic()
+        for r, (lo, hi) in zip(reqs, slices):
+            # each request sees only ITS rows, trimmed to its own n
+            r.future._resolve(X[lo:hi, : r.batch.n].copy(), handle, lo, hi, t_done)
+        self._retire(reqs)
 
     def _abort(self, reqs, exc: BaseException) -> None:
         for r in reqs:

@@ -24,24 +24,31 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # The supported surface. Adding a name here is an API commitment; removing
 # one is a breaking change. Keep sorted.
 FACADE = [
+    "CircuitBreaker",
+    "FaultInjector",
+    "FaultPlan",
     "FleetSolution",
     "ParetoFrontier",
     "PlanPolicy",
     "Problem",
     "ProblemBatch",
+    "RetryPolicy",
     "SchedulerService",
     "Solution",
     "SolutionBatch",
     "Solver",
+    "TransientEngineError",
 ]
 
 # Subpackage surfaces, frozen so a new entrypoint added there without a
 # matching facade decision trips this test.
 CORE_ALL = {
-    "ALGORITHMS", "CostWindows", "DEVICE_CLASSES", "FleetSolution",
-    "ItemClass", "JOULES_PER_KWH", "MC2MKPSolution", "ParetoFrontier",
-    "ParetoPoint", "PlanPolicy", "Problem", "ProblemBatch", "Solution",
-    "SolutionBatch", "Solver", "SweepEngine", "brute_force_schedule",
+    "ALGORITHMS", "CircuitBreaker", "CostWindows", "DEVICE_CLASSES",
+    "FleetSolution", "ItemClass", "JOULES_PER_KWH", "MC2MKPSolution",
+    "ParetoFrontier", "ParetoPoint", "PlanPolicy", "Problem", "ProblemBatch",
+    "RetryPolicy", "Solution", "SolutionBatch", "Solver", "SweepEngine",
+    "TransientEngineError", "is_transient", "retry_call",
+    "brute_force_schedule",
     "bucket_shape", "candidate_deadlines", "carbon_cost_table",
     "classify_regimes", "cluster_clients", "deadline_grid", "deadline_sweep",
     "default_engine", "device_fleet_problem", "feasible_deadline_range",
@@ -61,12 +68,14 @@ CORE_ALL = {
 }
 
 FL_ALL = {
-    "AsyncCampaignRunner", "CampaignHistory", "CampaignRunner",
-    "DeviceProfile", "EnergyEstimator", "FLRoundResult", "FederatedServer",
-    "PipelineStats", "PlanFuture", "PlanPolicy", "RoundPlan",
+    "AsyncCampaignRunner", "CampaignHistory", "CampaignRunner", "ClientFault",
+    "DeviceProfile", "EnergyEstimator", "FLRoundResult", "FaultInjector",
+    "FaultPlan", "FederatedServer", "FlakyEngine", "PipelineStats",
+    "PlanFuture", "PlanPolicy", "RecoveryInfo", "RoundFaults", "RoundPlan",
     "ScenarioReport", "SerialPlanExecutor", "ThreadPlanExecutor",
-    "apply_dropout", "local_train", "make_client_fn", "make_fleet",
-    "run_campaign",
+    "apply_dropout", "load_campaign_checkpoint", "local_train",
+    "make_client_fn", "make_fleet", "proportional_greedy",
+    "residual_problem", "run_campaign", "save_campaign_checkpoint",
 }
 
 SERVE_ALL = {

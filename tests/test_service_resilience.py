@@ -1,0 +1,302 @@
+"""Serving-layer resilience (DESIGN.md §17): flush retry with backoff,
+the circuit breaker's closed → open → half-open life cycle and its degraded
+direct-solve path, and real deadline enforcement on the staged futures."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CircuitBreaker,
+    RetryPolicy,
+    Solver,
+    TransientEngineError,
+    is_transient,
+    random_problem,
+)
+from repro.core.sweep import SweepEngine
+from repro.fl.faults import FlakyEngine
+from repro.serve import SchedulerService, ServiceClosed
+
+
+def _probs(rng, k=4, n=6, T=24):
+    return [random_problem(rng, n=n, T=T) for _ in range(k)]
+
+
+def _baseline(probs, split=False):
+    with SchedulerService(engine=SweepEngine(), max_delay_s=0.001) as svc:
+        return np.asarray(svc.submit(probs, split_regimes=split).result(timeout=60))
+
+
+# ---------------------------------------------------------------------------
+# resilience primitives
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_delays_are_bounded_and_deterministic():
+    pol = RetryPolicy(max_attempts=5, base_delay_s=0.01, max_delay_s=0.05, seed=3)
+    a = [pol.delay(k, pol.make_rng()) for k in range(1, 5)]
+    b = [pol.delay(k, pol.make_rng()) for k in range(1, 5)]
+    assert a == b  # deterministic per (policy seed, attempt)
+    for k, d in enumerate(a, start=1):
+        assert 0 < d <= 0.05 * (1 + pol.jitter)
+    assert a[1] > a[0]  # exponential until the cap
+
+
+def test_is_transient_recognizes_marker_class_and_attribute():
+    assert is_transient(TransientEngineError("x"))
+    err = RuntimeError("flaky")
+    assert not is_transient(err)
+    err.transient = True
+    assert is_transient(err)
+
+
+def test_circuit_breaker_state_machine():
+    now = [0.0]
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=10.0, clock=lambda: now[0])
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "closed"  # one short of the threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    now[0] = 10.5  # cooldown elapsed: exactly ONE half-open probe
+    assert br.allow()
+    assert not br.allow()  # second concurrent probe is rejected
+    br.record_failure()  # failed probe re-opens
+    assert br.state == "open"
+    now[0] = 21.0
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+    st = br.stats()
+    assert st["opens"] == 2 and st["probes"] == 2
+
+
+# ---------------------------------------------------------------------------
+# flush retry / degraded serving
+# ---------------------------------------------------------------------------
+
+
+def test_transient_flush_failure_retries_bit_identically():
+    rng = np.random.default_rng(0)
+    probs = _probs(rng)
+    want = _baseline(probs)
+    flaky = FlakyEngine(SweepEngine(), fail_ordinals=(0,))
+    with SchedulerService(
+        engine=flaky, max_delay_s=0.001, retry=RetryPolicy()
+    ) as svc:
+        got = np.asarray(svc.submit(probs).result(timeout=60))
+        st = svc.stats()
+    np.testing.assert_array_equal(want, got)
+    assert st["retries"] == 1 and st["flush_failures"] == 1
+    assert st["degraded_flushes"] == 0
+    assert flaky.fault_stats()["injected_failures"] == 1
+
+
+def test_non_transient_failure_propagates_without_retry():
+    class _BoomEngine:
+        def dispatch(self, batch, split_regimes=False):
+            raise RuntimeError("boom")
+
+        def cache_stats(self):
+            return {}
+
+    rng = np.random.default_rng(1)
+    with SchedulerService(
+        engine=_BoomEngine(), max_delay_s=0.001, retry=RetryPolicy()
+    ) as svc:
+        f = svc.submit(_probs(rng, k=2))
+        with pytest.raises(RuntimeError, match="boom"):
+            f.result(timeout=30)
+        st = svc.stats()
+    assert st["retries"] == 0  # non-transient: fail fast, never retried
+    assert st["flush_failures"] == 1
+    assert svc.stats()["inflight_rows"] == 0
+
+
+def test_retry_exhaustion_without_breaker_propagates():
+    flaky = FlakyEngine(SweepEngine(), fail_ordinals=range(50))
+    rng = np.random.default_rng(2)
+    with SchedulerService(
+        engine=flaky, max_delay_s=0.001, retry=RetryPolicy(max_attempts=3)
+    ) as svc:
+        f = svc.submit(_probs(rng, k=2))
+        with pytest.raises(TransientEngineError):
+            f.result(timeout=30)
+    assert svc.stats()["inflight_rows"] == 0
+
+
+@pytest.mark.parametrize("split", [False, True])
+def test_open_breaker_serves_degraded_bit_identical_schedules(split):
+    rng = np.random.default_rng(3)
+    probs = _probs(rng)
+    want = _baseline(probs, split=split)
+    flaky = FlakyEngine(SweepEngine(), fail_ordinals=range(50))
+    with SchedulerService(
+        engine=flaky,
+        max_delay_s=0.001,
+        retry=RetryPolicy(max_attempts=2),
+        breaker=CircuitBreaker(failure_threshold=1, cooldown_s=60.0),
+    ) as svc:
+        f = svc.submit(probs, split_regimes=split)
+        got = np.asarray(f.result(timeout=60))
+        np.testing.assert_array_equal(want, got)
+        # the degraded path has no fused-DP row to expose
+        if not split:
+            with pytest.raises(ValueError, match="degraded"):
+                f.k_last()
+        st = svc.stats()
+        assert st["breaker"]["state"] == "open"
+        assert st["degraded_flushes"] == 1 and st["degraded_rows"] == len(probs)
+        # while open, new flushes go straight to the degraded path — the
+        # engine is not touched again
+        calls_before = flaky.fault_stats()["dispatches"]
+        got2 = np.asarray(svc.submit(probs, split_regimes=split).result(timeout=60))
+        np.testing.assert_array_equal(want, got2)
+        assert flaky.fault_stats()["dispatches"] == calls_before
+        assert svc.stats()["degraded_flushes"] == 2
+
+
+def test_half_open_probe_closes_breaker_and_restores_engine_path():
+    rng = np.random.default_rng(4)
+    probs = _probs(rng, k=3)
+    want = _baseline(probs)
+    flaky = FlakyEngine(SweepEngine(), fail_ordinals=(0,))  # heals after one
+    br = CircuitBreaker(failure_threshold=1, cooldown_s=0.15)
+    with SchedulerService(engine=flaky, max_delay_s=0.001, breaker=br) as svc:
+        np.testing.assert_array_equal(
+            want, np.asarray(svc.submit(probs).result(timeout=60))
+        )
+        assert br.state == "open"  # first flush failed, served degraded
+        time.sleep(0.2)  # past the cooldown: next flush is the probe
+        f = svc.submit(probs)
+        np.testing.assert_array_equal(want, np.asarray(f.result(timeout=60)))
+        assert br.state == "closed"
+        _ = np.asarray(f.k_last())  # engine-served again: the DP row is back
+        assert br.stats()["probes"] == 1 and br.stats()["opens"] == 1
+
+
+def test_solver_retry_recovers_transient_direct_dispatch():
+    rng = np.random.default_rng(5)
+    probs = _probs(rng)
+    want = Solver(engine=SweepEngine()).solve(probs, algorithm="dp_batch")
+    flaky = FlakyEngine(SweepEngine(), fail_ordinals=(0,))
+    got = Solver(engine=flaky, retry=RetryPolicy()).solve(
+        probs, algorithm="dp_batch"
+    )
+    for a, b in zip(want.schedules, got.schedules):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(want.k_last, got.k_last)
+    assert flaky.fault_stats()["injected_failures"] == 1
+    # without a policy the same fault propagates (bit-identical legacy path)
+    flaky2 = FlakyEngine(SweepEngine(), fail_ordinals=(0,))
+    with pytest.raises(TransientEngineError):
+        Solver(engine=flaky2).solve(probs, algorithm="dp_batch")
+
+
+# ---------------------------------------------------------------------------
+# future deadline semantics
+# ---------------------------------------------------------------------------
+
+
+class _GatedHandle:
+    def __init__(self, gate, B, n):
+        self._gate, self._B, self._n = gate, B, n
+
+    def result(self):
+        assert self._gate.wait(timeout=60), "test gate never opened"
+        return np.zeros((self._B, self._n), dtype=np.int64)
+
+    def objectives(self):
+        return np.zeros(self._B)
+
+    def k_last(self):
+        assert self._gate.wait(timeout=60)
+        return np.zeros((self._B, 1))
+
+
+class _GatedEngine:
+    """Engine stand-in whose solves block until the test opens the gate."""
+
+    def __init__(self):
+        self.gate = threading.Event()
+        self.dispatched = 0
+
+    def dispatch(self, batch, split_regimes=False):
+        self.dispatched += 1
+        return _GatedHandle(self.gate, batch.B, batch.n)
+
+    def cache_stats(self):
+        return {}
+
+
+def _tiny(rng):
+    return random_problem(rng, n=2, T=4, regime="linear")
+
+
+def test_schedule_future_timeout_then_retry_no_inflight_leak():
+    eng = _GatedEngine()
+    rng = np.random.default_rng(6)
+    with SchedulerService(engine=eng, max_delay_s=0.001) as svc:
+        f = svc.submit(_tiny(rng))
+        with pytest.raises(TimeoutError, match="not served"):
+            f.result(timeout=0.05)
+        assert svc.stats()["inflight_rows"] == 1  # still in flight, not leaked
+        eng.gate.set()
+        X = f.result(timeout=30)  # the SAME future succeeds on retry
+        assert X.shape == (2,)
+        deadline = time.monotonic() + 30
+        while svc.stats()["inflight_rows"] and time.monotonic() < deadline:
+            time.sleep(0.005)
+    assert svc.stats()["inflight_rows"] == 0
+
+
+def test_fleet_future_result_enforces_real_deadline():
+    rng = np.random.default_rng(7)
+    p = random_problem(rng, n=64, T=512)
+    with SchedulerService(engine=SweepEngine(), max_delay_s=0.001) as svc:
+        fut = svc.submit_fleet(p, clusters=8)
+        with pytest.raises(TimeoutError, match="fleet solve"):
+            fut.result(timeout=1e-9)
+        sol = fut.result(timeout=120)  # nothing cached on the timed-out pass
+        want = Solver(engine=SweepEngine()).solve_fleet(p, clusters=8)
+        np.testing.assert_array_equal(sol.schedule, want.schedule)
+        assert sol.objective == want.objective
+
+
+def test_close_racing_blocked_submit_raises_service_closed():
+    """A submit blocked on backpressure when close() lands must see
+    ServiceClosed (a terminal state), NOT ServiceOverloaded (a retryable
+    one) — and the requests already admitted must still be served."""
+    eng = _GatedEngine()
+    rng = np.random.default_rng(8)
+    svc = SchedulerService(engine=eng, max_delay_s=0.0005, max_pending=2)
+    admitted = svc.submit([_tiny(rng), _tiny(rng)])  # fills the admission bound
+    deadline = time.monotonic() + 30
+    while eng.dispatched == 0 and time.monotonic() < deadline:
+        time.sleep(0.005)  # wait until the filler flush is in flight
+
+    errs = []
+
+    def blocked_submit():
+        try:
+            svc.submit(_tiny(rng), timeout=30)
+        except Exception as e:  # noqa: BLE001 - recorded for the assertion
+            errs.append(e)
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    time.sleep(0.1)  # let it enter the backpressure wait
+    closer = threading.Thread(target=svc.close)
+    closer.start()
+    time.sleep(0.1)
+    eng.gate.set()  # let the in-flight flush finish so close() can drain
+    t.join(timeout=30)
+    closer.join(timeout=30)
+    assert not t.is_alive() and not closer.is_alive()
+    assert len(errs) == 1 and isinstance(errs[0], ServiceClosed)
+    X = admitted.result(timeout=30)  # admitted work drained through close
+    assert X.shape == (2, 2)
+    assert svc.stats()["inflight_rows"] == 0

@@ -1,0 +1,338 @@
+"""Adaptive planning under drift benchmark (DESIGN.md §18).
+
+Runs drifting, chaotic campaigns through the adaptive layer and answers
+four questions, written to ``BENCH_adaptive.json``:
+
+  * **determinism under drift** (in-bench assert): a serial and a pipelined
+    campaign under the FULL adaptive policy (speculative lookahead + drift
+    detection + watermark + reliability) with seeded drift AND seeded client
+    chaos produce bit-identical params, losses, and energy accounting.
+  * **speculation economics** (headline, CI floor via check_bench): on a
+    stationary fleet every speculative round validates in-band and commits
+    with ZERO extra engine dispatches — exactly ``ceil(R / k)`` solver
+    batches for an R-round lookahead-k campaign (asserted on the engine's
+    own dispatch counters). Under mild seeded drift the committed fraction
+    is the ``speculation_hit_rate`` headline.
+  * **energy regret vs a clairvoyant oracle** (CI ceiling): a mid-campaign
+    regime flip (two busy clients get 2.5x costlier) while the online
+    calibrator re-plans from drifting estimates. Regret = extra TRUE Joules
+    vs an oracle that plans every round on the true drifted tables. The
+    calibrated planner must stay within the ceiling; the frozen-estimator
+    baseline (the pre-PR-10 planner under the same drift) must exceed it —
+    asserted in-bench, so the gap the adaptive layer closes is a promise,
+    not a hope.
+  * **barrier-wait reduction** (reported): straggler-heavy chaos where the
+    mid-round watermark dispatches recovery BEFORE the barrier; recovered
+    assignments stay bit-identical to the reactive path (asserted) and the
+    overlap is reported as ``barrier_wait_saved_pct``.
+
+Run as::
+
+    PYTHONPATH=src python benchmarks/bench_adaptive.py [--smoke] [--out PATH]
+"""
+
+import argparse
+import json
+import math
+import time
+
+VOCAB, DIM, SEQ = 256, 64, 16
+
+# ISSUE 10 acceptance: the calibrated planner's energy regret vs the
+# clairvoyant oracle stays under this ceiling (scripts/check_bench.py gates
+# it) while the frozen-estimator baseline EXCEEDS it under the same regime
+# flip — both asserted in-bench as well, so the smoke crashes if the
+# adaptive layer stops earning its keep. Measured (deterministic seeds):
+# 14.1% vs 23.9% frozen at the 6-round smoke shape, 4.2% vs 28.6% at 12.
+REGRET_CEILING_PCT = 20.0
+
+
+def build_campaign(seed: int, n_clients: int, max_batches: int, engine=None,
+                   policy_kwargs=None, estimator_kwargs=None, classes=None):
+    """A fresh (server, examples, rng, T) tuple; same seed => same campaign,
+    so every leg consumes identical inputs."""
+    import jax
+    import numpy as np
+
+    from repro.core.sweep import SweepEngine
+    from repro.data import client_corpora, make_lm_examples
+    from repro.fl import EnergyEstimator, FederatedServer, PlanPolicy, make_fleet
+    from repro.fl.toy import make_tiny_lm
+    from repro.optim import sgd
+
+    tiny_lm_init, tiny_lm_loss = make_tiny_lm(VOCAB, DIM)
+    rng = np.random.default_rng(seed)
+    fleet = make_fleet(rng, n_clients, classes=classes, max_batches=max_batches)
+    est = EnergyEstimator(fleet, **(estimator_kwargs or {}))
+    est.calibrate(rng)
+    corpora = client_corpora(rng, n_clients, 4000, VOCAB)
+    examples = [make_lm_examples(c, SEQ) for c in corpora]
+    T = sum(d.max_batches for d in fleet) // 2
+    server = FederatedServer(
+        loss_fn=tiny_lm_loss,
+        init_params=tiny_lm_init(jax.random.PRNGKey(1)),
+        client_optimizer=sgd(0.3),
+        estimator=est,
+        policy=PlanPolicy(
+            engine=engine if engine is not None else SweepEngine(),
+            **(policy_kwargs or {}),
+        ),
+    )
+    return server, examples, rng, T
+
+
+def _oracle_energy(seed: int, n_clients: int, max_batches: int, rounds: int,
+                   drift, classes=None) -> float:
+    """Total TRUE Joules of a clairvoyant planner: for each round, apply the
+    drift and solve the TRUE (drifted) tables — all rounds as ONE batch."""
+    from repro.core import Solver, total_cost
+    from repro.core.sweep import SweepEngine
+    from repro.fl import DriftInjector
+
+    server, _, _, T = build_campaign(seed, n_clients, max_batches, classes=classes)
+    injector = DriftInjector(drift)
+    problems = []
+    for r in range(rounds):
+        injector.apply(r, server.estimator.fleet)
+        problems.append(server.estimator.true_problem(T))
+    batch = Solver(engine=SweepEngine()).solve(problems, check=False)
+    return sum(
+        float(total_cost(p, x)) for p, x in zip(problems, batch.schedules)
+    )
+
+
+def _assert_bit_identical(h_a, h_b, tag: str):
+    import numpy as np
+
+    assert len(h_a.rounds) == len(h_b.rounds), tag
+    for ra, rb in zip(h_a.rounds, h_b.rounds):
+        np.testing.assert_array_equal(ra.assignments, rb.assignments, err_msg=tag)
+        assert ra.mean_loss == rb.mean_loss, tag
+        assert ra.energy_joules == rb.energy_joules, tag
+    np.testing.assert_array_equal(h_a.losses, h_b.losses, err_msg=tag)
+    assert h_a.total_energy == h_b.total_energy, tag
+
+
+def run_bench(rounds: int, n_clients: int = 8, max_batches: int = 48,
+              batch_size: int = 8, seed: int = 0, lookahead: int = 3) -> dict:
+    import numpy as np
+
+    from repro.core.sweep import SweepEngine
+    from repro.fl import DriftPlan, FaultPlan, run_campaign
+
+    adaptive_policy = dict(
+        lookahead=lookahead, drift_tolerance=0.1,
+        watermark_quantile=0.5, reliability=0.25,
+    )
+
+    # ---- leg 1: serial == pipelined under drift + chaos ------------------
+    drift = DriftPlan.generate(seed=seed + 50, num_rounds=rounds,
+                               n_clients=n_clients, p_event=0.3)
+    chaos = FaultPlan.generate(seed=seed + 100, num_rounds=rounds,
+                               n_clients=n_clients, p_crash=0.25, p_straggle=0.2)
+    server_s, examples, rng, T = build_campaign(
+        seed, n_clients, max_batches, policy_kwargs=adaptive_policy
+    )
+    t0 = time.perf_counter()
+    h_serial = run_campaign(
+        server_s, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        faults=chaos, drift=drift,
+    )
+    serial_s = time.perf_counter() - t0
+
+    server_p, examples, rng, _ = build_campaign(
+        seed, n_clients, max_batches, policy_kwargs=adaptive_policy
+    )
+    t0 = time.perf_counter()
+    h_pipe = run_campaign(
+        server_p, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        faults=chaos, drift=drift, pipelined=True,
+    )
+    pipelined_s = time.perf_counter() - t0
+    _assert_bit_identical(h_serial, h_pipe, "serial vs pipelined under drift+chaos")
+    import jax
+
+    for x, y in zip(jax.tree_util.tree_leaves(server_s.params),
+                    jax.tree_util.tree_leaves(server_p.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert h_serial.adaptive_stats == h_pipe.adaptive_stats
+
+    # ---- leg 2: speculation economics ------------------------------------
+    # stationary world: EVERY speculative round must commit, and the engine's
+    # own dispatch counters must show exactly ceil(R / k) solver batches
+    engine = SweepEngine()
+    server_st, examples, rng, _ = build_campaign(
+        seed, n_clients, max_batches, engine=engine,
+        policy_kwargs=dict(lookahead=lookahead),
+    )
+    before = engine.cache_stats()
+    h_st = run_campaign(
+        server_st, examples, rounds, round_T=T, batch_size=batch_size, rng=rng
+    )
+    after = engine.cache_stats()
+    dispatches = (after["hits"] + after["misses"]) - (before["hits"] + before["misses"])
+    expected = math.ceil(rounds / lookahead)
+    assert dispatches == expected, (
+        f"stationary lookahead-{lookahead} campaign dispatched {dispatches} "
+        f"solver batches, expected exactly {expected} (speculation must add "
+        f"ZERO extra solves when every round validates in-band)"
+    )
+    st_stats = h_st.adaptive_stats
+    assert st_stats["speculation_hit_rate"] == 1.0, st_stats
+
+    # mild seeded drift: the headline hit rate (floored by check_bench)
+    mild = DriftPlan.generate(seed=seed + 60, num_rounds=rounds,
+                              n_clients=n_clients, walk_sigma=0.01, p_event=0.0)
+    server_m, examples, rng, _ = build_campaign(
+        seed, n_clients, max_batches, policy_kwargs=dict(lookahead=lookahead)
+    )
+    h_mild = run_campaign(
+        server_m, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        drift=mild,
+    )
+    mild_stats = h_mild.adaptive_stats
+
+    # ---- leg 3: energy regret vs the clairvoyant oracle ------------------
+    # Two-class linear fleet (tablet 2.2 J/batch, laptop 1.2 J/batch): the
+    # cheap laptops carry the work until the regime flip makes the two
+    # busiest of them 2.5x costlier (3.0 > 2.2) — the true optimum then
+    # shifts their load onto tablets. A fleet with no viable alternatives
+    # would hide the baseline's misallocation entirely.
+    regret_classes = ("tablet", "laptop")
+    server_probe, _, _, regret_T = build_campaign(
+        seed, n_clients, max_batches, classes=regret_classes
+    )
+    x0 = np.asarray(
+        server_probe.plan_round(
+            0, regret_T, server_probe.build_problem(regret_T)
+        ).assignments
+    )
+    victims = tuple(int(i) for i in np.argsort(x0)[-2:])
+    flip_round = rounds // 2
+    step = DriftPlan.step(num_rounds=rounds, n_clients=n_clients,
+                          round_index=flip_round, clients=victims, factor=2.5)
+    # a wider huber band lets the calibrator chase the 2.5x jump in a few
+    # rounds (one observation per client per round); robustness vs agility
+    # is a knob, and this leg measures the agile end
+    agile = dict(huber_delta=0.75)
+    server_ad, examples, rng, _ = build_campaign(
+        seed, n_clients, max_batches, estimator_kwargs=agile,
+        policy_kwargs=dict(lookahead=lookahead), classes=regret_classes,
+    )
+    h_ad = run_campaign(
+        server_ad, examples, rounds, round_T=regret_T, batch_size=batch_size,
+        rng=rng, drift=step,
+    )
+    # the frozen baseline: ema=0 pins every table at its calibration-time
+    # values — exactly the pre-adaptive planner living through the same flip
+    server_fz, examples, rng, _ = build_campaign(
+        seed, n_clients, max_batches, estimator_kwargs=dict(ema=0.0),
+        classes=regret_classes,
+    )
+    h_fz = run_campaign(
+        server_fz, examples, rounds, round_T=regret_T, batch_size=batch_size,
+        rng=rng, drift=step,
+    )
+    oracle_J = _oracle_energy(
+        seed, n_clients, max_batches, rounds, step, classes=regret_classes
+    )
+    regret_ad = 100.0 * (h_ad.total_energy - oracle_J) / oracle_J
+    regret_fz = 100.0 * (h_fz.total_energy - oracle_J) / oracle_J
+    assert regret_ad >= -1e-9, "campaign beat the clairvoyant oracle — impossible"
+    assert regret_fz > regret_ad, (
+        f"frozen-estimator regret {regret_fz:.2f}% must exceed the online "
+        f"calibrator's {regret_ad:.2f}% under a regime flip"
+    )
+    assert regret_ad <= REGRET_CEILING_PCT, (
+        f"adaptive regret {regret_ad:.2f}% above the {REGRET_CEILING_PCT}% ceiling"
+    )
+    assert regret_fz > REGRET_CEILING_PCT, (
+        f"frozen baseline regret {regret_fz:.2f}% should exceed the "
+        f"{REGRET_CEILING_PCT}% ceiling — if the flip no longer hurts the "
+        f"uncalibrated planner, the leg is not measuring anything"
+    )
+
+    # ---- leg 4: watermark barrier-wait reduction -------------------------
+    stragglers = FaultPlan.generate(seed=seed + 300, num_rounds=rounds,
+                                    n_clients=n_clients, p_crash=0.0,
+                                    p_straggle=0.5)
+    server_re, examples, rng, _ = build_campaign(seed, n_clients, max_batches)
+    h_re = run_campaign(
+        server_re, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        faults=stragglers,
+    )
+    server_wm, examples, rng, _ = build_campaign(
+        seed, n_clients, max_batches,
+        policy_kwargs=dict(watermark_quantile=0.5),
+    )
+    h_wm = run_campaign(
+        server_wm, examples, rounds, round_T=T, batch_size=batch_size, rng=rng,
+        faults=stragglers,
+    )
+    # stragglers are always early-detectable: the watermark path must land
+    # on the SAME recovered schedules, earlier
+    _assert_bit_identical(h_re, h_wm, "watermark vs reactive straggler recovery")
+    wm_stats = h_wm.adaptive_stats
+
+    return {
+        "rounds": rounds,
+        "n_clients": n_clients,
+        "round_T": int(T),
+        "lookahead": lookahead,
+        # leg 1
+        "serial_total_s": serial_s,
+        "pipelined_total_s": pipelined_s,
+        "chaos_drift_rounds_detected": h_serial.adaptive_stats["drift_rounds"],
+        "chaos_speculation_hit_rate": h_serial.adaptive_stats["speculation_hit_rate"],
+        # leg 2
+        "stationary_solver_dispatches": int(dispatches),
+        "stationary_hit_rate": st_stats["speculation_hit_rate"],
+        "speculation_hit_rate": mild_stats["speculation_hit_rate"],
+        "speculation_batches": mild_stats["speculation_batches"],
+        "speculation_misses": mild_stats["speculation_misses"],
+        # leg 3
+        "regret_vs_oracle_pct": regret_ad,
+        "frozen_regret_pct": regret_fz,
+        "oracle_energy_J": oracle_J,
+        "adaptive_energy_J": float(h_ad.total_energy),
+        "frozen_energy_J": float(h_fz.total_energy),
+        # leg 4
+        "barrier_wait_saved_pct": wm_stats["barrier_wait_saved_pct_mean"],
+        "barrier_wait_saved": wm_stats["barrier_wait_saved"],
+        "early_replans": wm_stats["early_replans"],
+    }
+
+
+def run():
+    """Harness entry point (benchmarks.run): a short drifting campaign."""
+    r = run_bench(rounds=6, n_clients=6, max_batches=32, batch_size=4)
+    return [
+        (
+            f"adaptive_drift_x{r['rounds']}",
+            r["serial_total_s"] / r["rounds"] * 1e3,
+            f"hit_rate={r['speculation_hit_rate']:.0%} "
+            f"regret={r['regret_vs_oracle_pct']:.2f}% "
+            f"frozen={r['frozen_regret_pct']:.2f}%",
+        )
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small fast config for CI")
+    ap.add_argument("--out", default="BENCH_adaptive.json")
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+
+    rounds = args.rounds or (6 if args.smoke else 12)
+    n_clients = 6 if args.smoke else 10
+    result = run_bench(rounds=rounds, n_clients=n_clients)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Run as:
 import argparse
 import sys
 
-MODULES = ("example", "optimality", "runtime", "batch", "sweep", "async", "fl_energy", "pareto", "kernels", "marginal", "roofline", "serve", "fleet", "faults")
+MODULES = ("example", "optimality", "runtime", "batch", "sweep", "async", "fl_energy", "pareto", "kernels", "marginal", "roofline", "serve", "fleet", "faults", "adaptive")
 
 
 def main() -> None:

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # CI entry point: dev deps (best-effort — tier-1 runs without network thanks
 # to tests/_hypothesis_fallback.py), lint, tier-1 tests, the perf smokes
-# (BENCH_batch/sweep/async/kernels/marginal/serve/pareto/fleet/faults.json),
-# the
+# (BENCH_batch/sweep/async/kernels/marginal/serve/pareto/fleet/faults/
+# adaptive.json), the
 # examples under -W error::DeprecationWarning, and the regression gate
 # (scripts/check_bench.py) against the committed baselines.
 set -euo pipefail
@@ -79,6 +79,10 @@ if ! python benchmarks/bench_fleet.py --smoke --out BENCH_fleet.json; then
 fi
 if ! python benchmarks/bench_faults.py --smoke --out BENCH_faults.json; then
   echo "ci.sh: FAIL — bench_faults.py chaos smoke crashed" >&2
+  exit 1
+fi
+if ! python benchmarks/bench_adaptive.py --smoke --out BENCH_adaptive.json; then
+  echo "ci.sh: FAIL — bench_adaptive.py drift smoke crashed" >&2
   exit 1
 fi
 

@@ -22,11 +22,14 @@ from .core import (
     Solver,
     TransientEngineError,
 )
+from .fl.adaptive import DriftInjector, DriftPlan
 from .fl.faults import FaultInjector, FaultPlan
 from .serve import SchedulerService
 
 __all__ = [
     "CircuitBreaker",
+    "DriftInjector",
+    "DriftPlan",
     "FaultInjector",
     "FaultPlan",
     "FleetSolution",

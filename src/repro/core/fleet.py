@@ -105,6 +105,18 @@ class PlanPolicy:
     # transient engine failures during round planning (DESIGN.md §17);
     # None = fail fast (the campaign loop still has its own re-plan path)
     retry: Optional[object] = None
+    # adaptive planning under drift (DESIGN.md §18). lookahead=k solves the
+    # next k rounds' schedules per speculative batch (0 = off);
+    # drift_tolerance bounds both the Page–Hinkley detector and the
+    # speculative-plan validation band; reliability (an EWMA decay in
+    # (0, 1]) arms crash/straggle-history capacity down-weighting;
+    # watermark_quantile (in (0, 1)) arms intra-round re-planning at that
+    # quantile of planned per-client finish times. All default-off: a
+    # default policy runs the pre-adaptive loop byte-identically.
+    lookahead: int = 0
+    drift_tolerance: float = 0.1
+    reliability: Optional[float] = None
+    watermark_quantile: Optional[float] = None
 
     def __post_init__(self):
         # normalize the sequence fields so policies compare by value
@@ -124,6 +136,23 @@ class PlanPolicy:
             )
         if self.frontier_mode is not None and self.time_tables is None:
             raise ValueError("frontier_mode requires time_tables")
+        if int(self.lookahead) < 0:
+            raise ValueError("lookahead must be >= 0")
+        if int(self.lookahead) > 0 and (
+            self.frontier_mode is not None or self.fleet_clusters is not None
+        ):
+            raise ValueError(
+                "lookahead speculation requires the default min-energy "
+                "planning path (no frontier_mode / fleet_clusters)"
+            )
+        if not (float(self.drift_tolerance) > 0.0):
+            raise ValueError("drift_tolerance must be > 0")
+        if self.reliability is not None and not (0.0 < float(self.reliability) <= 1.0):
+            raise ValueError("reliability is an EWMA decay in (0, 1]")
+        if self.watermark_quantile is not None and not (
+            0.0 < float(self.watermark_quantile) < 1.0
+        ):
+            raise ValueError("watermark_quantile must be in (0, 1)")
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,12 @@
+from .adaptive import (
+    AdaptiveCoordinator,
+    AdaptiveRoundStats,
+    DriftDetector,
+    DriftInjector,
+    DriftPlan,
+    WatermarkStats,
+    watermark_split,
+)
 from .client import local_train, make_client_fn
 from .energy import DeviceProfile, EnergyEstimator, make_fleet
 from .faults import (
@@ -40,4 +49,6 @@ __all__ = [
     "ClientFault", "FaultInjector", "FaultPlan", "FlakyEngine", "RoundFaults",
     "RecoveryInfo", "proportional_greedy", "residual_problem",
     "load_campaign_checkpoint", "save_campaign_checkpoint",
+    "AdaptiveCoordinator", "AdaptiveRoundStats", "DriftDetector",
+    "DriftInjector", "DriftPlan", "WatermarkStats", "watermark_split",
 ]

@@ -77,6 +77,7 @@ from ..checkpoint import latest_checkpoint, load_checkpoint_arrays, save_checkpo
 from ..core.problem import Problem, total_cost
 from ..core.resilience import is_transient
 from ..data.pipeline import lm_round_batches
+from .adaptive import AdaptiveCoordinator, AdaptiveRoundStats, DriftInjector, DriftPlan
 from .faults import FaultInjector, FaultPlan, proportional_greedy, residual_problem
 from .server import (
     FederatedServer,
@@ -239,6 +240,7 @@ def _round_to_tree_meta(res: FLRoundResult):
         "makespan_joules": float(res.makespan_joules),
         "scen_labels": None,
         "recovery": None,
+        "adaptive": None if res.adaptive is None else res.adaptive.as_dict(),
     }
     if res.scenarios is not None:
         meta["scen_labels"] = [str(lbl) for lbl in res.scenarios.labels]
@@ -311,6 +313,8 @@ def _round_from_arrays(data: dict, prefix: str, meta: dict) -> FLRoundResult:
         makespan_joules=float(meta["makespan_joules"]),
         scenarios=scenarios,
         recovery=recovery,
+        # .get: pre-PR-10 checkpoints carry no adaptive telemetry
+        adaptive=AdaptiveRoundStats.from_dict(meta.get("adaptive")),
     )
 
 
@@ -320,10 +324,15 @@ def save_campaign_checkpoint(
     server: FederatedServer,
     rng: np.random.Generator,
     results,
+    adaptive: Optional[AdaptiveCoordinator] = None,
 ) -> str:
-    """Persists the round-``step`` restart state (params + estimator tables
-    + rng state + completed results) via :func:`repro.checkpoint.
-    save_checkpoint`. ``step`` is the 0-indexed last COMPLETED round."""
+    """Persists the round-``step`` restart state (params + estimator state
+    + rng state + completed results + any adaptive-coordinator state) via
+    :func:`repro.checkpoint.save_checkpoint`. ``step`` is the 0-indexed
+    last COMPLETED round. Estimator persistence goes through the public
+    :meth:`~repro.fl.energy.EnergyEstimator.state_dict` — table keys keep
+    the pre-PR-10 ``est/{i:04d}`` npz layout, calibration state rides
+    ``est/calib_*`` keys alongside."""
     rounds_tree, rounds_meta = {}, []
     for res in results:
         tree_r, meta_r = _round_to_tree_meta(res)
@@ -331,11 +340,7 @@ def save_campaign_checkpoint(
         rounds_meta.append(meta_r)
     tree = {
         "params": server.params,
-        "est": {
-            f"{i:04d}": np.asarray(t)
-            for i, t in enumerate(server.estimator._tables)
-            if t is not None
-        },
+        "est": server.estimator.state_dict(),
         "rounds": rounds_tree,
     }
     extra = {
@@ -343,16 +348,47 @@ def save_campaign_checkpoint(
         "rng_state": rng.bit_generator.state,
         "rounds": rounds_meta,
     }
+    if adaptive is not None:
+        st = adaptive.checkpoint_state()
+        atree = {}
+        for k, e in enumerate(st["entries"]):
+            atree[f"spec{k:02d}"] = {
+                "problem": _problem_to_tree(e["problem"]),
+                "x": np.asarray(e["x"], dtype=np.int64),
+            }
+        if st["pending"] is not None:
+            atree["pending_x"] = np.asarray(st["pending"]["x"], dtype=np.int64)
+        if atree:
+            tree["adapt"] = atree
+        extra["adaptive"] = {
+            "entries": [int(e["round"]) for e in st["entries"]],
+            "pending": (
+                None
+                if st["pending"] is None
+                else {k: v for k, v in st["pending"].items() if k != "x"}
+            ),
+            "detector": st["detector"],
+            "counters": st["counters"],
+            "per_round": {str(r): d for r, d in st["per_round"].items()},
+            "wm_saved": st["wm_saved"],
+            "wm_saved_pct": st["wm_saved_pct"],
+        }
     return save_checkpoint(directory, int(step), tree, extra)
 
 
 def load_campaign_checkpoint(
-    directory: str, server: FederatedServer, rng: np.random.Generator
+    directory: str,
+    server: FederatedServer,
+    rng: np.random.Generator,
+    adaptive: Optional[AdaptiveCoordinator] = None,
 ):
     """Restores the latest campaign checkpoint IN PLACE (params, estimator
-    tables, rng state) and returns ``(last_completed_round, results)`` —
-    or None when the directory holds no checkpoint. The continuation is
-    bit-identical to the uninterrupted campaign (tests/test_faults.py)."""
+    state, rng state, adaptive-coordinator state when given one) and
+    returns ``(last_completed_round, results)`` — or None when the
+    directory holds no checkpoint. The continuation is bit-identical to the
+    uninterrupted campaign (tests/test_faults.py, tests/test_adaptive.py).
+    Pre-PR-10 checkpoints (bare ``est/{i:04d}`` tables, no adaptive block)
+    still load: calibration state resets to fresh defaults."""
     import jax
 
     from ..checkpoint.checkpoint import _path_str
@@ -371,15 +407,43 @@ def load_campaign_checkpoint(
     server.params = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(server.params), new_leaves
     )
-    for i in range(len(server.estimator._tables)):
-        key = f"est/{i:04d}"
-        if key in data:
-            server.estimator._tables[i] = np.asarray(data[key], dtype=np.float64)
+    est_state = {
+        key[len("est/"):]: arr
+        for key, arr in data.items()
+        if key.startswith("est/")
+    }
+    server.estimator.load_state_dict(est_state)
     rng.bit_generator.state = extra["rng_state"]
     results = [
         _round_from_arrays(data, f"rounds/r{int(m['round_index']):06d}", m)
         for m in extra["rounds"]
     ]
+    am = extra.get("adaptive")
+    if adaptive is not None and am is not None:
+        entries = []
+        for k, rnd in enumerate(am["entries"]):
+            prefix = f"adapt/spec{k:02d}"
+            prob = _problem_from_arrays(
+                lambda key, _p=prefix: data[f"{_p}/problem/{key}"]
+            )
+            entries.append({
+                "round": int(rnd),
+                "problem": prob,
+                "x": np.asarray(data[f"{prefix}/x"], dtype=np.int64),
+            })
+        pending = None
+        if am["pending"] is not None:
+            pending = dict(am["pending"])
+            pending["x"] = np.asarray(data["adapt/pending_x"], dtype=np.int64)
+        adaptive.load_checkpoint_state({
+            "entries": entries,
+            "pending": pending,
+            "detector": am["detector"],
+            "counters": am["counters"],
+            "per_round": {int(r): d for r, d in am["per_round"].items()},
+            "wm_saved": am["wm_saved"],
+            "wm_saved_pct": am["wm_saved_pct"],
+        })
     return int(extra["round"]), results
 
 
@@ -434,6 +498,10 @@ class CampaignHistory:
     dp_cache_stats: Optional[dict] = None
     # executor timing (DESIGN.md §11): how much planning the pipeline hid.
     pipeline_stats: Optional[PipelineStats] = None
+    # adaptive-layer rollup (DESIGN.md §18): drift rounds, speculation
+    # hits/misses, early re-plans, barrier-wait savings. None unless the
+    # campaign ran with an AdaptiveCoordinator.
+    adaptive_stats: Optional[dict] = None
 
     @property
     def total_energy(self) -> float:
@@ -467,6 +535,21 @@ class CampaignHistory:
                 sum(ri.est_overhead_J for ri in recovered)
             )
             out["recovery_shortfall"] = int(sum(ri.shortfall for ri in recovered))
+        # adaptive telemetry (DESIGN.md §18) — keyed only for adaptive
+        # campaigns, so default-policy summaries are unchanged
+        if self.adaptive_stats is not None:
+            a = self.adaptive_stats
+            out["drift_rounds"] = a["drift_rounds"]
+            out["speculation_hits"] = a["speculation_hits"]
+            out["speculation_misses"] = a["speculation_misses"]
+            out["speculation_batches"] = a["speculation_batches"]
+            out["speculation_hit_rate"] = a["speculation_hit_rate"]
+            out["replan_rate"] = (
+                a["speculation_misses"] / len(self.rounds) if self.rounds else 0.0
+            )
+            out["early_replans"] = a["early_replans"]
+            out["barrier_wait_saved"] = a["barrier_wait_saved"]
+            out["barrier_wait_saved_pct_mean"] = a["barrier_wait_saved_pct_mean"]
         return out
 
 
@@ -500,6 +583,7 @@ class CampaignRunner:
         max_steps: Optional[int] = None,
         on_round: Optional[Callable[[FLRoundResult], None]] = None,
         faults: Optional[object] = None,
+        drift: Optional[object] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 1,
     ) -> CampaignHistory:
@@ -515,17 +599,34 @@ class CampaignRunner:
         submit extra one-off requests to ``server.service``. ``faults=None``
         leaves every code path bit-identical to the pre-fault-layer loop.
 
+        ``drift``: a :class:`~repro.fl.adaptive.DriftPlan` or
+        :class:`~repro.fl.adaptive.DriftInjector` (DESIGN.md §18) — the
+        fleet's TRUE energy tables move per the seeded plan, applied on the
+        main thread at the top of each round, so serial and pipelined
+        campaigns drift identically. The adaptive planning features
+        themselves are armed on the server's policy
+        (``lookahead`` / ``drift_tolerance`` / ``reliability`` /
+        ``watermark_quantile``); with the policy defaults this loop is
+        byte-identical to the pre-adaptive one.
+
         ``checkpoint_dir``: round-granular checkpoint/resume (DESIGN.md
         §17) — the restart state is saved every ``checkpoint_every``
         completed rounds (and on the final round), and a non-empty directory
         resumes from its latest checkpoint, reproducing the uninterrupted
-        campaign's params and history exactly.
+        campaign's params and history exactly (adaptive speculation state
+        included).
         """
         server = self.server
         server.round_T = round_T
         if max_steps is None:
             max_steps = max(d.max_batches for d in server.estimator.fleet)
         injector = FaultInjector(faults) if isinstance(faults, FaultPlan) else faults
+        drifter = DriftInjector(drift) if isinstance(drift, DriftPlan) else drift
+        adaptive = (
+            AdaptiveCoordinator(server)
+            if AdaptiveCoordinator.enabled(server.policy)
+            else None
+        )
         stats = PipelineStats(mode=self.mode)
         executor = _EXECUTORS[self.mode]()
         futures: List[PlanFuture] = []
@@ -563,7 +664,9 @@ class CampaignRunner:
         start_round = 0
         results: List[FLRoundResult] = []
         if checkpoint_dir is not None:
-            restored = load_campaign_checkpoint(checkpoint_dir, server, rng)
+            restored = load_campaign_checkpoint(
+                checkpoint_dir, server, rng, adaptive=adaptive
+            )
             if restored is not None:
                 start_round, results = restored[0] + 1, list(restored[1])
         before = server.engine.cache_stats()
@@ -571,15 +674,26 @@ class CampaignRunner:
             if start_round < num_rounds:
                 # The first plan has nothing to hide behind — submitted
                 # eagerly so the pipelined path still has one entry point.
-                plan_f = submit(
-                    f"plan[{start_round}]",
-                    server.plan_round,
-                    start_round,
-                    round_T,
-                    server.build_problem(round_T),
-                )
+                # The coordinator's first_plan replays a restored pending
+                # decision (bit-identical resume) or opens the speculation
+                # window; without a coordinator this is the classic solve.
+                if adaptive is not None:
+                    plan_f = adaptive.first_plan(start_round, round_T, submit)
+                else:
+                    plan_f = submit(
+                        f"plan[{start_round}]",
+                        server.plan_round,
+                        start_round,
+                        round_T,
+                        server.build_problem(round_T),
+                    )
             for r in range(start_round, num_rounds):
                 t_round = time.perf_counter()
+                if drifter is not None:
+                    # the world moves first (main thread, round order):
+                    # round r's true charging and measurements see the
+                    # drifted tables, the planner only ever sees estimates
+                    drifter.apply(r, server.estimator.fleet)
                 if injector is not None and server.service is not None:
                     for b in range(injector.burst(r)):
                         # chaos traffic: extra one-off requests against the
@@ -595,14 +709,27 @@ class CampaignRunner:
                             pass
                 batches = lm_round_batches(examples_per_client, max_steps, batch_size, r)
                 plan = materialize_plan(plan_f, r)
+                round_faults = None
                 if injector is not None:
                     round_faults = injector.round_faults(r, plan.assignments)
                     if round_faults is not None:
-                        plan = server.recover_round(plan, round_faults)
+                        if adaptive is not None:
+                            # watermark path: early-detectable faults
+                            # re-solve before the barrier (DESIGN.md §18)
+                            plan = adaptive.handle_faults(plan, round_faults)
+                        else:
+                            plan = server.recover_round(plan, round_faults)
                 mean_loss = server.train_round(plan, batches)  # async dispatch
                 # CPU-side accounting runs while the device trains; it is
                 # the only stage touching rng/estimator state (see server).
                 acct = server.account_round(plan, rng)
+                if adaptive is not None:
+                    # fold round telemetry into detector + reliability
+                    # (main thread, round order — same determinism contract
+                    # as account_round)
+                    adaptive.after_account(r, plan, round_faults)
+                else:
+                    server.estimator.drain_innovations()  # unused: discard
                 # Snapshot next-round planning NOW (post-accounting), hand
                 # the solves to the executor, materialize only when needed.
                 scen_problems, scen_labels = server.build_scenarios(plan.T)
@@ -610,13 +737,16 @@ class CampaignRunner:
                     f"scenarios[{r}]", server.solve_scenarios, scen_problems, scen_labels
                 )
                 if r + 1 < num_rounds:
-                    plan_f = submit(
-                        f"plan[{r + 1}]",
-                        server.plan_round,
-                        r + 1,
-                        round_T,
-                        server.build_problem(round_T),
-                    )
+                    if adaptive is not None:
+                        plan_f = adaptive.next_plan(r + 1, round_T, submit)
+                    else:
+                        plan_f = submit(
+                            f"plan[{r + 1}]",
+                            server.plan_round,
+                            r + 1,
+                            round_T,
+                            server.build_problem(round_T),
+                        )
                 t0 = time.perf_counter()
                 loss = float(mean_loss)  # blocks until clients finish
                 stats.train_block_s += time.perf_counter() - t0
@@ -629,12 +759,17 @@ class CampaignRunner:
                     makespan_joules=acct["makespan_joules"],
                     scenarios=materialize_scenarios(scen_f, scen_problems, scen_labels),
                     recovery=plan.recovery,
+                    adaptive=(
+                        adaptive.round_stats(r) if adaptive is not None else None
+                    ),
                 )
                 results.append(res)
                 if checkpoint_dir is not None and (
                     (r + 1) % max(1, int(checkpoint_every)) == 0 or r == num_rounds - 1
                 ):
-                    save_campaign_checkpoint(checkpoint_dir, r, server, rng, results)
+                    save_campaign_checkpoint(
+                        checkpoint_dir, r, server, rng, results, adaptive=adaptive
+                    )
                 stats.round_wall_s.append(time.perf_counter() - t_round)
                 if on_round:
                     on_round(res)
@@ -662,6 +797,7 @@ class CampaignRunner:
             rounds=results,
             dp_cache_stats=delta,
             pipeline_stats=stats,
+            adaptive_stats=adaptive.summary_stats() if adaptive is not None else None,
         )
 
     def _replan(self, r: int, T: int, max_attempts: int = 3) -> RoundPlan:

@@ -30,6 +30,7 @@ def run_campaign(
     on_round: Optional[Callable[[FLRoundResult], None]] = None,
     pipelined: bool = False,
     faults=None,
+    drift=None,
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
 ) -> CampaignHistory:
@@ -54,9 +55,11 @@ def run_campaign(
 
     ``faults`` (a :class:`~repro.fl.faults.FaultPlan` or
     :class:`~repro.fl.faults.FaultInjector`) arms the deterministic
-    fault-injection layer; ``checkpoint_dir``/``checkpoint_every`` arm
-    round-granular checkpoint/resume — both fully inert when unset
-    (DESIGN.md §17).
+    fault-injection layer; ``drift`` (a :class:`~repro.fl.adaptive.DriftPlan`
+    or :class:`~repro.fl.adaptive.DriftInjector`) arms deterministic
+    per-round energy-cost drift on the TRUE simulator tables;
+    ``checkpoint_dir``/``checkpoint_every`` arm round-granular
+    checkpoint/resume — all fully inert when unset (DESIGN.md §17–18).
     """
     runner = CampaignRunner(server, mode="pipelined" if pipelined else "serial")
     return runner.run(
@@ -68,6 +71,7 @@ def run_campaign(
         max_steps=max_steps,
         on_round=on_round,
         faults=faults,
+        drift=drift,
         checkpoint_dir=checkpoint_dir,
         checkpoint_every=checkpoint_every,
     )

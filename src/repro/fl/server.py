@@ -129,6 +129,9 @@ class FLRoundResult:
     makespan_joules: float  # max per-device energy (OLAR's objective, for contrast)
     scenarios: Optional[ScenarioReport] = None  # what-if planning, if enabled
     recovery: Optional[RecoveryInfo] = None  # mid-round recovery, if it fired
+    # an repro.fl.adaptive.AdaptiveRoundStats when the adaptive layer is on
+    # (DESIGN.md §18): drift classification, speculation outcome, watermark
+    adaptive: Optional[object] = None
 
 
 def apply_dropout(problem: Problem, dropped) -> Problem:
@@ -287,11 +290,30 @@ class FederatedServer:
         """Snapshot stage: the scheduling instance for workload ``T`` under
         the CURRENT estimates (cheap numpy — safe to run on the round hot
         path; the returned Problem is immutable, so a background solver can
-        consume it while the estimator keeps drifting)."""
-        est_problem = self.estimator.problem(T)
+        consume it while the estimator keeps drifting).
+
+        With ``policy.reliability`` set, chronically flaky clients get their
+        effective ``upper`` down-weighted by the estimator's crash/straggle
+        reliability scores (DESIGN.md §18) — in this planning snapshot only,
+        never in the true simulator tables."""
+        est_problem = self.estimator.problem(T, reliability=self._reliability_weights())
         if unavailable:
             est_problem = apply_dropout(est_problem, unavailable)
         return est_problem
+
+    def predict_problem(self, T: int, steps: int) -> Problem:
+        """The PREDICTED planning instance ``steps`` rounds ahead (tables
+        extrapolated along the estimator's per-client trend) — what the
+        speculative lookahead batch solves. ``steps=0`` is exactly
+        :meth:`build_problem` without dropout."""
+        return self.estimator.predict_problem(
+            T, steps, reliability=self._reliability_weights()
+        )
+
+    def _reliability_weights(self):
+        if self.policy.reliability is None:
+            return None
+        return self.estimator.reliability_weights()
 
     def plan_round(
         self, round_index: int, T: int, est_problem: Optional[Problem] = None
@@ -448,11 +470,14 @@ class FederatedServer:
         anywhere."""
         if not self.scenario_T_candidates and not self.scenario_dropouts:
             return [], []
-        base = self.estimator.problem(T)
+        # build_problem (not the raw estimator) so scenario what-ifs see the
+        # same reliability-weighted envelope round planning does; with
+        # policy.reliability unset this is the estimator snapshot verbatim
+        base = self.build_problem(T)
         problems, labels = [], []
         for Tc in self.scenario_T_candidates:
             Tc_eff = int(np.clip(int(Tc), int(base.lower.sum()), int(base.upper.sum())))
-            problems.append(self.estimator.problem(Tc_eff))
+            problems.append(self.build_problem(Tc_eff))
             labels.append(f"T={Tc_eff}")
         for sub in self.scenario_dropouts:
             problems.append(apply_dropout(base, sub))

@@ -25,6 +25,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # one is a breaking change. Keep sorted.
 FACADE = [
     "CircuitBreaker",
+    "DriftInjector",
+    "DriftPlan",
     "FaultInjector",
     "FaultPlan",
     "FleetSolution",
@@ -68,14 +70,17 @@ CORE_ALL = {
 }
 
 FL_ALL = {
-    "AsyncCampaignRunner", "CampaignHistory", "CampaignRunner", "ClientFault",
-    "DeviceProfile", "EnergyEstimator", "FLRoundResult", "FaultInjector",
+    "AdaptiveCoordinator", "AdaptiveRoundStats", "AsyncCampaignRunner",
+    "CampaignHistory", "CampaignRunner", "ClientFault",
+    "DeviceProfile", "DriftDetector", "DriftInjector", "DriftPlan",
+    "EnergyEstimator", "FLRoundResult", "FaultInjector",
     "FaultPlan", "FederatedServer", "FlakyEngine", "PipelineStats",
     "PlanFuture", "PlanPolicy", "RecoveryInfo", "RoundFaults", "RoundPlan",
     "ScenarioReport", "SerialPlanExecutor", "ThreadPlanExecutor",
-    "apply_dropout", "load_campaign_checkpoint", "local_train",
-    "make_client_fn", "make_fleet", "proportional_greedy",
+    "WatermarkStats", "apply_dropout", "load_campaign_checkpoint",
+    "local_train", "make_client_fn", "make_fleet", "proportional_greedy",
     "residual_problem", "run_campaign", "save_campaign_checkpoint",
+    "watermark_split",
 }
 
 SERVE_ALL = {
